@@ -1,0 +1,148 @@
+"""Reproductions of the paper's tables/figures on real CPU measurements.
+
+table1  — anomaly instance: median-of-10 rankings from two independent runs
+          (the paper's Table I instability demonstration) vs the
+          methodology's stable performance classes.
+table2  — instance (75,75,8,75,75): expected classes [1,1,2,2,3,3]
+          (Table II) from the converged ranking.
+table3  — quantile-range ladder on the same instance (Table III): wide
+          ranges merge, narrow ranges split; mean rank across the ladder.
+fig5    — Instances A and B through Procedure 4 (M=3, eps=0.03, max=30):
+          initial hypothesis, final sequence, ranks + mean ranks,
+          measurements-to-convergence.
+fig7b   — the anomaly instance under the left-tail (fast-mode) quantile
+          set.
+discriminant — the FLOPs test verdict for every instance.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    DEFAULT_QUANTILE_RANGES,
+    FAST_MODE_QUANTILE_RANGES,
+    WallClockTimer,
+    flops_discriminant_test,
+    initial_hypothesis_by_time,
+    mean_ranks,
+    measure_and_rank,
+    relative_flops,
+)
+from repro.core.measure import MeasurementStore
+
+from .common import chain_setup, fmt_ranking, median_ranking
+
+
+def table1_anomaly_instability(smoke: bool, out: List[str]) -> None:
+    t0 = time.time()
+    inst, algs, workloads, flops = chain_setup("anomaly_331", smoke)
+    rf = relative_flops(flops)
+    run1 = median_ranking(workloads, n=10)
+    run2 = median_ranking(workloads, n=10)
+    out.append(f"table1.run1_median_ranking,{(time.time()-t0)*1e6:.0f},"
+               + "|".join(f"{n}({rf[n]:.2f})" for n in run1))
+    out.append(f"table1.run2_median_ranking,0,"
+               + "|".join(f"{n}({rf[n]:.2f})" for n in run2))
+    out.append(
+        f"table1.median_rankings_differ,0,{run1 != run2}"
+        " (paper: two median-based runs give different orders)"
+    )
+
+    timer = WallClockTimer(workloads)
+    single = {n: timer.measure(n) for n in workloads}
+    h0 = initial_hypothesis_by_time(single)
+    res = measure_and_rank(h0, timer, m_per_iteration=3, eps=0.03, max_measurements=30)
+    out.append(f"table1.methodology_classes,0,{fmt_ranking(res, rf)}")
+    rep = flops_discriminant_test(res, flops)
+    out.append(f"table1.discriminant,0,anomaly={rep.is_anomaly} reason={rep.reason}")
+
+
+def table2_three_classes(smoke: bool, out: List[str]) -> None:
+    t0 = time.time()
+    inst, algs, workloads, flops = chain_setup("fig3_75", smoke)
+    rf = relative_flops(flops)
+    timer = WallClockTimer(workloads)
+    single = {n: timer.measure(n) for n in workloads}
+    res = measure_and_rank(
+        initial_hypothesis_by_time(single), timer,
+        m_per_iteration=4, eps=0.01, max_measurements=40,
+    )
+    out.append(f"table2.classes,{(time.time()-t0)*1e6:.0f},{fmt_ranking(res, rf)}")
+    # paper expectation: min-FLOPs pair shares the best class
+    best = set(res.best_class())
+    sf = {n for n, v in rf.items() if v == 0.0}
+    out.append(f"table2.min_flops_pair_best,0,{sf <= best}")
+
+
+def table3_quantile_ladder(smoke: bool, out: List[str]) -> None:
+    inst, algs, workloads, flops = chain_setup("fig3_75", smoke)
+    timer = WallClockTimer(workloads)
+    store = MeasurementStore()
+    for name in workloads:
+        store.add(name, timer.measure_many(name, 20))
+    order = sorted(workloads)
+    for qr in DEFAULT_QUANTILE_RANGES:
+        res = mean_ranks(order, store.as_mapping(), quantile_ranges=[qr], report_range=qr)
+        ranks = {n: r for n, r in zip(res.order, res.ranks)}
+        out.append(
+            f"table3.q{int(qr[0])}-{int(qr[1])},0,"
+            + "|".join(f"{n}:r{ranks[n]}" for n in order)
+        )
+    res = mean_ranks(order, store.as_mapping())
+    out.append(
+        "table3.mean_ranks,0,"
+        + "|".join(f"{n}:{res.mean_ranks[n]:.2f}" for n in order)
+    )
+    # invariant: widest range produces the fewest classes
+    res_wide = mean_ranks(order, store.as_mapping(), quantile_ranges=[(5.0, 95.0)], report_range=(5.0, 95.0))
+    res_narrow = mean_ranks(order, store.as_mapping(), quantile_ranges=[(35.0, 65.0)], report_range=(35.0, 65.0))
+    out.append(
+        f"table3.wide_merges_more,0,{max(res_wide.ranks) <= max(res_narrow.ranks)}"
+    )
+
+
+def fig5_convergence(smoke: bool, out: List[str]) -> None:
+    for name in ("instance_A", "instance_B"):
+        t0 = time.time()
+        inst, algs, workloads, flops = chain_setup(name, smoke)
+        rf = relative_flops(flops)
+        timer = WallClockTimer(workloads)
+        single = {n: timer.measure(n) for n in workloads}
+        h0 = initial_hypothesis_by_time(single)
+        res = measure_and_rank(h0, timer, m_per_iteration=3, eps=0.03, max_measurements=30)
+        out.append(
+            f"fig5.{name},{(time.time()-t0)*1e6:.0f},"
+            f"h0={'|'.join(h0)} N={res.measurements_per_alg} "
+            f"converged={res.converged} :: {fmt_ranking(res, rf)}"
+        )
+        rep = flops_discriminant_test(res, flops)
+        out.append(f"fig5.{name}.discriminant,0,anomaly={rep.is_anomaly} reason={rep.reason}")
+
+
+def fig7b_fast_mode(smoke: bool, out: List[str]) -> None:
+    t0 = time.time()
+    inst, algs, workloads, flops = chain_setup("anomaly_331", smoke)
+    rf = relative_flops(flops)
+    timer = WallClockTimer(workloads)
+    single = {n: timer.measure(n) for n in workloads}
+    res = measure_and_rank(
+        initial_hypothesis_by_time(single), timer,
+        m_per_iteration=3, eps=0.03, max_measurements=30,
+        quantile_ranges=FAST_MODE_QUANTILE_RANGES,
+        report_range=(15.0, 45.0),
+    )
+    out.append(f"fig7b.fast_mode_classes,{(time.time()-t0)*1e6:.0f},{fmt_ranking(res, rf)}")
+    rep = flops_discriminant_test(res, flops)
+    out.append(f"fig7b.discriminant,0,anomaly={rep.is_anomaly} reason={rep.reason}")
+
+
+def run(smoke: bool, out: List[str]) -> None:
+    table1_anomaly_instability(smoke, out)
+    table2_three_classes(smoke, out)
+    table3_quantile_ladder(smoke, out)
+    fig5_convergence(smoke, out)
+    fig7b_fast_mode(smoke, out)

@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run reports (§Roofline data source).
+
+Reads reports/dryrun_16x16.json (+ 2x16x16 when present) and prints the
+three terms per cell, the dominant bottleneck, MODEL/HLO FLOPs ratio and the
+roofline fraction. The dry-run itself is launched separately
+(python -m repro.launch.dryrun) because it needs 512 host devices.
+
+Also runs a compile-time COST-MODEL ranking over sharding variants for one
+cell (cost-model timer backend = the methodology at cluster scale) when the
+reports are present.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.autotune import rank_site_costmodel
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def run(smoke: bool, out: List[str]) -> None:
+    found = False
+    for label in ("16x16", "2x16x16"):
+        path = os.path.join(REPORT_DIR, f"dryrun_{label}.json")
+        if not os.path.exists(path):
+            out.append(f"roofline.{label},0,report missing (run repro.launch.dryrun)")
+            continue
+        found = True
+        rows = json.load(open(path))
+        n_ok = sum(r["status"].startswith("ok") for r in rows)
+        out.append(f"roofline.{label}.cells_ok,0,{n_ok}/{len(rows)}")
+        for r in rows:
+            if not r["status"].startswith("ok"):
+                continue
+            out.append(
+                f"roofline.{label}.{r['arch']}.{r['shape']},0,"
+                f"tc={r['t_compute_s']} tm={r['t_memory_s']} "
+                f"tx={r['t_collective_s']} dom={r['dominant']} "
+                f"ratio={r['model_hlo_ratio']} frac={r['roofline_fraction']} "
+                f"mem={r['mem_per_dev_gb']}GB"
+            )
+
+    # cost-model ranking demo over recorded per-cell bound times
+    path = os.path.join(REPORT_DIR, "dryrun_16x16.json")
+    if found and os.path.exists(path):
+        rows = [r for r in json.load(open(path))
+                if r["status"].startswith("ok") and r["shape"] == "train_4k"]
+        if len(rows) >= 2:
+            costs = {
+                r["arch"]: max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+                for r in rows
+            }
+            flops = {r["arch"]: float(r["model_flops"]) for r in rows}
+            rep = rank_site_costmodel("train_4k_bound_time", costs, flops)
+            seq = "|".join(f"{a.name}:r{a.rank}" for a in rep.ranking.sequence)
+            out.append(f"roofline.costmodel_ranking,0,{seq}")

@@ -1,0 +1,88 @@
+"""Beyond-paper: the ranking methodology over the FRAMEWORK's variant sites.
+
+Each site is a set of mathematically equivalent implementations inside the
+training/serving stack (repro.autotune.variants); the paper's pipeline
+(filter -> Procedure 4 -> FLOPs test) selects the production variant and
+reports whether FLOPs discriminated. Expression families beyond chains
+(solve/gram/distributive) exercise identities the chain instances cannot.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.autotune import (
+    attention_site,
+    matmul_blocks_site,
+    moe_dispatch_site,
+    rank_site,
+    ssd_chunk_site,
+)
+from repro.core import (
+    WallClockTimer,
+    flops_discriminant_test,
+    initial_hypothesis_by_time,
+    measure_and_rank,
+)
+from repro.expressions import FAMILIES
+
+
+def _emit(out: List[str], rep) -> None:
+    tag = rep.site.split("[")[0]
+    seq = "|".join(
+        f"{a.name}:r{a.rank}" for a in rep.ranking.sequence
+    )
+    out.append(f"variants.{tag},{rep.wall_time_s*1e6:.0f},{seq} "
+               f"selected={rep.selected} anomaly={rep.discriminant.is_anomaly}"
+               f"({rep.discriminant.reason})")
+
+
+def run(smoke: bool, out: List[str]) -> None:
+    scale = 0.5 if smoke else 1.0
+    rep = rank_site(
+        moe_dispatch_site(tokens=int(4096 * scale), d=256, e=16, top_k=2, d_ff=256),
+        max_measurements=18,
+    )
+    _emit(out, rep)
+
+    rep = rank_site(
+        attention_site(b=2, s=int(2048 * scale), h=8, kv=2, d=64),
+        max_measurements=18,
+    )
+    _emit(out, rep)
+
+    rep = rank_site(
+        ssd_chunk_site(b=2, s=int(2048 * scale), h=8, p=32, n=32,
+                       chunks=(64, 128, 256)),
+        max_measurements=18,
+    )
+    _emit(out, rep)
+
+    if not smoke:
+        rep = rank_site(
+            matmul_blocks_site(m=512, k=512, n=512,
+                               blocks=((128, 128, 128), (256, 256, 256)),
+                               interpret=True),
+            max_measurements=9,
+        )
+        _emit(out, rep)
+
+    # expression families (beyond-chain identities)
+    for fam_name in ("solve", "distributive", "gram", "bilinear"):
+        t0 = time.time()
+        fam = FAMILIES[fam_name](int(512 * scale) if fam_name != "bilinear" else int(1024 * scale))
+        workloads = fam.workloads(size=int(512 * scale) if fam_name != "bilinear" else int(1024 * scale))
+        flops = fam.flops_table()
+        timer = WallClockTimer(workloads)
+        single = {n: timer.measure(n) for n in workloads}
+        res = measure_and_rank(
+            initial_hypothesis_by_time(single), timer,
+            m_per_iteration=3, eps=0.03, max_measurements=18,
+        )
+        repd = flops_discriminant_test(res, flops)
+        seq = "|".join(f"{a.name}:r{a.rank}" for a in res.sequence)
+        out.append(
+            f"variants.family_{fam_name},{(time.time()-t0)*1e6:.0f},{seq} "
+            f"anomaly={repd.is_anomaly}({repd.reason})"
+        )

@@ -1,0 +1,54 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    DiscriminantReport,
+    RankingResult,
+    WallClockTimer,
+    relative_flops,
+)
+from repro.expressions import (
+    ChainInstance,
+    build_workloads,
+    flops_table,
+    get_instance,
+    make_chain_inputs,
+)
+
+
+def chain_setup(instance_name: str, smoke: bool, seed: int = 0):
+    """(instance, algorithms, workloads table, flops table)."""
+    inst = get_instance(instance_name, smoke=smoke)
+    algs = inst.algorithms()
+    mats = make_chain_inputs(inst.dims, seed=seed)
+    workloads = build_workloads(algs, mats, jit=True, warmup=True)
+    return inst, algs, workloads, flops_table(algs)
+
+
+def fmt_ranking(res: RankingResult, rf: Dict[str, float]) -> str:
+    cells = [
+        f"{a.name}[r{a.rank} mr={a.mean_rank:.2f} RF={rf.get(a.name, float('nan')):.2f}]"
+        for a in res.sequence
+    ]
+    return " ".join(cells)
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def median_ranking(workloads, n: int = 10) -> List[str]:
+    """Paper Sec. I style: rank by median of n measurements (the UNSTABLE
+    baseline the methodology replaces)."""
+    timer = WallClockTimer(workloads)
+    meds = {
+        name: float(np.median([timer.measure(name) for _ in range(n)]))
+        for name in workloads
+    }
+    return sorted(meds, key=meds.get)

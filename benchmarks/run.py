@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure + framework sites.
+
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
+
+Output: ``name,us_per_call,derived`` CSV lines (one per measured table row).
+``--smoke`` runs reduced instance sizes (CI); the default reproduces the
+paper-scale instances (minutes on one CPU core).
+
+Modules:
+  paper_tables — Tables I/II/III, Fig. 5, Fig. 7b on real measurements
+  turbo        — Fig. 6/7a turbo-boost (bimodal) study, simulated modes
+  variants     — beyond-paper: framework variant sites + expression families
+  roofline     — §Roofline table from the dry-run reports
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+from . import (
+    bench_large_chain,
+    bench_paper_tables,
+    bench_roofline,
+    bench_turbo,
+    bench_variant_sites,
+)
+
+MODULES = {
+    "paper_tables": bench_paper_tables.run,
+    "turbo": bench_turbo.run,
+    "variants": bench_variant_sites.run,
+    "large_chain": bench_large_chain.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true", help="reduced sizes (CI)")
+    p.add_argument("--only", default=None, choices=list(MODULES))
+    args = p.parse_args()
+
+    out: List[str] = []
+    t_all = time.time()
+    names = [args.only] if args.only else list(MODULES)
+    for name in names:
+        t0 = time.time()
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        try:
+            MODULES[name](args.smoke, out)
+        except Exception as e:  # keep the harness going; record the failure
+            out.append(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+
+    print("name,us_per_call,derived")
+    for line in out:
+        print(line)
+    print(f"# total {time.time()-t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

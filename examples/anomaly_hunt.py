@@ -1,0 +1,62 @@
+"""Anomaly hunting: sweep random chain instances, classify each with the
+FLOPs-discriminant test, and report the anomaly rate — the experiment the
+paper positions as the input to performance-model research (Sec. V: "verify
+that there exists an abundance of anomalies").
+
+    PYTHONPATH=src python examples/anomaly_hunt.py --n 12 --lo 32 --hi 256
+"""
+
+import argparse
+import time
+
+from repro.core import (
+    WallClockTimer,
+    filter_candidates,
+    flops_discriminant_test,
+    initial_hypothesis_by_time,
+    measure_and_rank,
+)
+from repro.expressions import (
+    build_workloads,
+    flops_table,
+    make_chain_inputs,
+    random_instance,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12, help="instances to test")
+    ap.add_argument("--lo", type=int, default=32)
+    ap.add_argument("--hi", type=int, default=256)
+    ap.add_argument("--chain", type=int, default=4, help="matrices per chain")
+    args = ap.parse_args()
+
+    anomalies = 0
+    for seed in range(args.n):
+        inst = random_instance(args.chain, args.lo, args.hi, seed=seed)
+        algs = inst.algorithms()
+        flops = flops_table(algs)
+        mats = make_chain_inputs(inst.dims, seed=seed)
+        workloads = build_workloads(algs, mats, warmup=True)
+        timer = WallClockTimer(workloads)
+
+        single = {n: timer.measure(n) for n in workloads}
+        cand = filter_candidates(flops, single, rt_threshold=1.5)
+        h0 = [n for n in initial_hypothesis_by_time(single) if n in cand.names]
+        res = measure_and_rank(h0, timer, m_per_iteration=3, eps=0.03,
+                               max_measurements=24)
+        rep = flops_discriminant_test(res, flops)
+        anomalies += rep.is_anomaly
+        tag = f"ANOMALY ({rep.reason})" if rep.is_anomaly else "ok"
+        print(f"dims={inst.dims}  N={res.measurements_per_alg:2d} "
+              f"classes={max(res.ranks.values())}  {tag}")
+
+    print(f"\nanomaly rate: {anomalies}/{args.n} "
+          f"({100.0*anomalies/args.n:.0f}%) at dims in [{args.lo}, {args.hi}]")
+    print("(paper [5] reports ~0.4% at BLAS scale on 10-core MKL; small sizes"
+          " on a noisy shared core are far more anomaly-prone)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Variant autotuning walkthrough: the paper's methodology selecting
+implementation variants inside the framework.
+
+Runs three variant sites (MoE dispatch, attention implementation, SSD chunk
+length), prints the full ranking pipeline per site — candidate filtering,
+converged performance classes, FLOPs-discriminant verdict, selection.
+
+    PYTHONPATH=src python examples/rank_algorithms.py
+"""
+
+import argparse
+
+from repro.autotune import (
+    attention_site,
+    moe_dispatch_site,
+    rank_site,
+    ssd_chunk_site,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    args = ap.parse_args()
+    s = args.scale
+
+    sites = [
+        moe_dispatch_site(tokens=int(2048 * s), d=256, e=16, top_k=2, d_ff=256),
+        attention_site(b=2, s=int(1024 * s), h=8, kv=2, d=64),
+        ssd_chunk_site(b=2, s=int(1024 * s), h=8, p=32, n=32, chunks=(64, 128, 256)),
+    ]
+    for site in sites:
+        report = rank_site(site, max_measurements=18)
+        print(report.summary())
+        if report.dropped:
+            print(f"  dropped by RT filter: {', '.join(report.dropped)}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

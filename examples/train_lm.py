@@ -1,0 +1,118 @@
+"""End-to-end training driver: synthetic data -> sharded train loop ->
+checkpoints -> resume, with the autotuner picking implementation variants.
+
+Default trains a ~100M-param llama-style model for a few hundred steps on
+the host mesh (CPU here; the same code path jits onto a TPU mesh):
+
+    PYTHONPATH=src python examples/train_lm.py                  # ~100M
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 40
+    PYTHONPATH=src python examples/train_lm.py --resume         # from ckpt
+
+Loss decreases on the structured synthetic stream (copy-chain signal).
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.distributed.sharding import batch_spec, make_plan, tree_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models import ForwardOptions, ModelConfig, init_lm_params
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.trainer import init_train_state, make_train_step
+
+PRESETS = {
+    # ~100M params: 12L x 768 with a 32k vocab (GPT-2-small-ish)
+    "100m": ModelConfig(
+        name="train-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab_size=32768, dtype="float32", param_dtype="float32",
+    ),
+    "10m": ModelConfig(
+        name="train-10m", n_layers=6, d_model=256, n_heads=8, n_kv_heads=4,
+        d_ff=704, vocab_size=8192, dtype="float32", param_dtype="float32",
+    ),
+    "tiny": ModelConfig(
+        name="train-tiny", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=352, vocab_size=1024, dtype="float32", param_dtype="float32",
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="100m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    mesh = make_host_mesh()
+    print(f"mesh: {mesh}")
+
+    from repro.models.flops import param_counts
+
+    pc = param_counts(cfg)
+    print(f"model {cfg.name}: {pc.total/1e6:.1f}M params")
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+    ))
+    optimizer = AdamW(schedule=cosine_schedule(args.lr, 20, args.steps))
+    opts = ForwardOptions(attn_impl="reference")
+    step_fn = make_train_step(cfg, optimizer, opts)
+
+    plan = make_plan(cfg, mesh, mode="train")
+    params, axes = init_lm_params(cfg, jax.random.PRNGKey(0))
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    params = jax.device_put(params, tree_shardings(plan, axes, shapes))
+    state = init_train_state(cfg, optimizer, params)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    start_step = 0
+    if args.resume:
+        restored = ckpt.restore_latest(state)
+        if restored is not None:
+            state, last_step, extra = restored
+            start_step = int(extra.get("next_step", last_step + 1))
+            print(f"resumed from step {last_step}")
+
+    jstep = jax.jit(step_fn, donate_argnums=(0,))
+    bspec = NamedSharding(mesh, batch_spec(mesh, args.batch, 1))
+    t0 = time.time()
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = {
+                k: jax.device_put(v, bspec)
+                for k, v in data.batch(step).items()
+            }
+            state, metrics = jstep(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                toks = args.batch * args.seq
+                dt = time.time() - t0
+                print(
+                    f"step {step:4d}  loss={float(metrics['loss']):.4f} "
+                    f"nll={float(metrics['nll']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} "
+                    f"({toks*(step-start_step+1)/max(dt,1e-9)/1e3:.1f}k tok/s)"
+                )
+            if (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step, state, extra={"next_step": step + 1})
+    ckpt.save(args.steps - 1, state, extra={"next_step": args.steps})
+    print("done; checkpoint in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

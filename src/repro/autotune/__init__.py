@@ -1,0 +1,24 @@
+"""repro.autotune — the paper's ranking methodology as the framework's
+variant selector (measured or cost-modelled)."""
+
+from .tuner import TuneReport, rank_site, rank_site_costmodel
+from .variants import (
+    Variant,
+    VariantSite,
+    attention_site,
+    matmul_blocks_site,
+    moe_dispatch_site,
+    ssd_chunk_site,
+)
+
+__all__ = [
+    "TuneReport",
+    "Variant",
+    "VariantSite",
+    "attention_site",
+    "matmul_blocks_site",
+    "moe_dispatch_site",
+    "rank_site",
+    "rank_site_costmodel",
+    "ssd_chunk_site",
+]

@@ -1,0 +1,153 @@
+"""The paper's methodology as the framework's variant selector.
+
+``rank_site`` runs the full pipeline on a :class:`VariantSite`:
+
+1. single warm run per variant -> RT scores -> candidate filtering
+   (paper Sec. I steps 1-3);
+2. initial hypothesis = increasing single-run time (step 4);
+3. Procedure 4 (convergence-driven incremental measurement with mean ranks
+   over the quantile ladder);
+4. FLOPs-discriminant test over the site's analytic FLOP table;
+5. selection: best-rank variant, ties broken by (FLOPs, mean rank).
+
+``rank_site_costmodel`` swaps wall-clock for the dry-run roofline cost model
+(CostModelTimer) — compile-time selection for cluster-scale variants that
+cannot be executed on this host. Both paths return the same report type, so
+EXPERIMENTS.md can compare 'measured' vs 'modelled' verdicts per site.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    CostModelTimer,
+    DiscriminantReport,
+    RankingResult,
+    WallClockTimer,
+    filter_candidates,
+    flops_discriminant_test,
+    initial_hypothesis_by_time,
+    measure_and_rank,
+)
+
+from .variants import VariantSite
+
+
+@dataclasses.dataclass
+class TuneReport:
+    site: str
+    ranking: RankingResult
+    discriminant: DiscriminantReport
+    selected: str
+    single_run_times: Dict[str, float]
+    dropped: tuple
+    wall_time_s: float
+    backend: str
+
+    def summary(self) -> str:
+        lines = [f"site {self.site} [{self.backend}]"]
+        for a in self.ranking.sequence:
+            rf = self.discriminant.relative_flops.get(a.name, float("nan"))
+            t = self.single_run_times.get(a.name, float("nan"))
+            sel = " <= selected" if a.name == self.selected else ""
+            lines.append(
+                f"  rank {a.rank}  {a.name:24s} mr={a.mean_rank:.2f} "
+                f"RF={rf:.2f} t1={t*1e3:.2f}ms{sel}"
+            )
+        lines.append(
+            f"  FLOPs discriminant: "
+            f"{'ANOMALY (' + self.discriminant.reason + ')' if self.discriminant.is_anomaly else 'valid'}"
+        )
+        return "\n".join(lines)
+
+
+def rank_site(
+    site: VariantSite,
+    *,
+    seed: int = 0,
+    m_per_iteration: int = 3,
+    eps: float = 0.03,
+    max_measurements: int = 30,
+    rt_threshold: float = 1.5,
+    quantile_ranges=None,
+) -> TuneReport:
+    """Wall-clock ranking of a variant site (paper-faithful pipeline)."""
+    t0 = time.time()
+    workloads = site.workloads(seed=seed, warmup=True)
+    timer = WallClockTimer(workloads)
+
+    single = {name: timer.measure(name) for name in workloads}
+    flops = site.flops_table()
+    cand = filter_candidates(flops, single, rt_threshold=rt_threshold)
+    h0 = [n for n in initial_hypothesis_by_time(single) if n in cand.names]
+
+    kwargs = {}
+    if quantile_ranges is not None:
+        kwargs["quantile_ranges"] = quantile_ranges
+    ranking = measure_and_rank(
+        h0, timer,
+        m_per_iteration=m_per_iteration,
+        eps=eps,
+        max_measurements=max_measurements,
+        **kwargs,
+    )
+    report = flops_discriminant_test(ranking, flops)
+    selected = _select(ranking, flops)
+    return TuneReport(
+        site=site.name,
+        ranking=ranking,
+        discriminant=report,
+        selected=selected,
+        single_run_times=single,
+        dropped=cand.dropped,
+        wall_time_s=time.time() - t0,
+        backend="wall-clock",
+    )
+
+
+def rank_site_costmodel(
+    site_name: str,
+    costs: Mapping[str, float],
+    flops: Mapping[str, float],
+    *,
+    rel_sigma: float = 0.0,
+    m_per_iteration: int = 3,
+    eps: float = 0.03,
+    max_measurements: int = 30,
+) -> TuneReport:
+    """Compile-time ranking from roofline-model costs (seconds/variant)."""
+    t0 = time.time()
+    timer = CostModelTimer(costs, rel_sigma=rel_sigma)
+    single = {name: timer.measure(name) for name in costs}
+    h0 = initial_hypothesis_by_time(single)
+    ranking = measure_and_rank(
+        h0, timer,
+        m_per_iteration=m_per_iteration,
+        eps=eps,
+        max_measurements=max_measurements,
+    )
+    report = flops_discriminant_test(ranking, flops)
+    return TuneReport(
+        site=site_name,
+        ranking=ranking,
+        discriminant=report,
+        selected=_select(ranking, flops),
+        single_run_times=single,
+        dropped=(),
+        wall_time_s=time.time() - t0,
+        backend="cost-model",
+    )
+
+
+def _select(ranking: RankingResult, flops: Mapping[str, float]) -> str:
+    """Best performance class; ties broken by min FLOPs then mean rank."""
+    best = ranking.best_class()
+    return min(
+        best,
+        key=lambda n: (flops.get(n, float("inf")), ranking.mean_ranks.get(n, 0.0)),
+    )

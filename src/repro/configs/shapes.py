@@ -1,0 +1,52 @@
+"""Assigned input shapes and the (architecture x shape) cell grid.
+
+LM transformer shapes are seq_len x global_batch. ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``. ``long_500k`` requires sub-quadratic sequence mixing and is
+skipped for pure full-attention archs (recorded per-arch below and in
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+#: Archs for which long_500k runs (sub-quadratic or windowed sequence mixing
+#: at 500k). All others skip it with the reason recorded here.
+LONG_CONTEXT_ARCHS = ("gemma2-27b", "jamba-v0.1-52b", "mamba2-1.3b")
+
+SKIPS: Dict[Tuple[str, str], str] = {
+    ("qwen2-moe-a2.7b", "long_500k"): "pure full attention: 500k dense KV prefill is quadratic",
+    ("granite-moe-3b-a800m", "long_500k"): "pure full attention: 500k dense KV prefill is quadratic",
+    ("command-r-plus-104b", "long_500k"): "pure full attention: 500k dense KV prefill is quadratic",
+    ("qwen3-14b", "long_500k"): "pure full attention: 500k dense KV prefill is quadratic",
+    ("granite-8b", "long_500k"): "pure full attention: 500k dense KV prefill is quadratic",
+    ("llava-next-mistral-7b", "long_500k"): "mistral SWA backbone, but vision-prefill → 500k decode cell is out of the VLM serving envelope; skipped with the full-attention group",
+    ("whisper-tiny", "long_500k"): "enc-dec with 1500-frame encoder context; 500k decode undefined",
+}
+
+
+def cells(arch_names: List[str]) -> List[Tuple[str, str, Optional[str]]]:
+    """All (arch, shape, skip_reason) cells — 40 total for 10 archs."""
+    out = []
+    for arch in arch_names:
+        for shape in SHAPES:
+            out.append((arch, shape, SKIPS.get((arch, shape))))
+    return out

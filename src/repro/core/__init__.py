@@ -1,0 +1,88 @@
+"""repro.core — the paper's contribution.
+
+Statistically-sound ranking of mathematically equivalent algorithms into
+performance classes (Sankaran & Bientinesi 2022), plus the test for FLOPs as
+a discriminant. Backend-agnostic: measurements may come from wall-clock
+timing, simulation, or a compiled-artifact cost model.
+"""
+
+from .comparison import compare_measurements, compare_range, quantile_window
+from .convergence import (
+    convergence_norm,
+    first_differences,
+    measure_and_rank,
+)
+from .discriminant import flops_discriminant_test
+from .meanrank import MeanRankResult, mean_ranks
+from .measure import (
+    CostModelTimer,
+    MeasurementStore,
+    NoiseProfile,
+    SimulatedTimer,
+    Timer,
+    WallClockTimer,
+)
+from .ranking import (
+    make_measurement_comparator,
+    ranks_as_dict,
+    sort_algorithms,
+    sort_by_measurements,
+)
+from .scores import (
+    CandidateSet,
+    filter_candidates,
+    initial_hypothesis_by_flops,
+    initial_hypothesis_by_time,
+    min_flops_set,
+    relative_flops,
+    relative_times,
+)
+from .types import (
+    DEFAULT_QUANTILE_RANGES,
+    FAST_MODE_QUANTILE_RANGES,
+    REPORT_QUANTILE_RANGE,
+    DiscriminantReport,
+    IterationRecord,
+    Outcome,
+    QuantileRange,
+    RankedAlgorithm,
+    RankingResult,
+)
+
+__all__ = [
+    "CandidateSet",
+    "CostModelTimer",
+    "DEFAULT_QUANTILE_RANGES",
+    "DiscriminantReport",
+    "FAST_MODE_QUANTILE_RANGES",
+    "IterationRecord",
+    "MeanRankResult",
+    "MeasurementStore",
+    "NoiseProfile",
+    "Outcome",
+    "QuantileRange",
+    "RankedAlgorithm",
+    "RankingResult",
+    "REPORT_QUANTILE_RANGE",
+    "SimulatedTimer",
+    "Timer",
+    "WallClockTimer",
+    "compare_measurements",
+    "compare_range",
+    "convergence_norm",
+    "filter_candidates",
+    "first_differences",
+    "flops_discriminant_test",
+    "initial_hypothesis_by_flops",
+    "initial_hypothesis_by_time",
+    "make_measurement_comparator",
+    "mean_ranks",
+    "measure_and_rank",
+    "min_flops_set",
+    "quantile_window",
+    "ranks_as_dict",
+    "relative_flops",
+    "relative_times",
+    "sort_algorithms",
+    "sort_by_measurements",
+]

@@ -1,0 +1,66 @@
+"""Three-way algorithm comparison (paper Procedure 1, ``CompareAlgs``).
+
+Two sets of time measurements are compared through a quantile range
+``(q_lower, q_upper)``:
+
+* ``alg_i`` is *better* than ``alg_j``   iff  ``Q_hi(t_i) < Q_lo(t_j)``
+* ``alg_i`` is *worse*  than ``alg_j``   iff  ``Q_hi(t_j) < Q_lo(t_i)``
+* otherwise the two are *equivalent* — their measurement distributions
+  overlap inside the chosen quantile window.
+
+The comparison is distribution-free: no normality or unimodality assumption
+is made, which is what lets the same machinery handle multi-modal
+(turbo-boost) measurement profiles (paper Sec. IV).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .types import Outcome, QuantileRange
+
+
+def quantile_window(t: Sequence[float], q_lower: float, q_upper: float) -> tuple:
+    """Return ``(Q_lo, Q_hi)`` of measurement vector ``t``.
+
+    Uses linear interpolation between order statistics (NumPy default), which
+    is well-defined down to N == 1 (both quantiles collapse to the value).
+    """
+    arr = np.asarray(t, dtype=np.float64)
+    if arr.size == 0:
+        raise ValueError("cannot compare an algorithm with zero measurements")
+    lo = float(np.percentile(arr, q_lower))
+    hi = float(np.percentile(arr, q_upper))
+    return lo, hi
+
+
+def compare_measurements(
+    t_i: Sequence[float],
+    t_j: Sequence[float],
+    q_lower: float,
+    q_upper: float,
+) -> Outcome:
+    """Procedure 1: three-way comparison of two measurement sets."""
+    if not (0.0 < q_lower < q_upper < 100.0):
+        raise ValueError(
+            f"quantile range must satisfy 0 < q_lower < q_upper < 100, "
+            f"got ({q_lower}, {q_upper})"
+        )
+    i_lo, i_hi = quantile_window(t_i, q_lower, q_upper)
+    j_lo, j_hi = quantile_window(t_j, q_lower, q_upper)
+    if i_hi < j_lo:
+        return Outcome.BETTER
+    if j_hi < i_lo:
+        return Outcome.WORSE
+    return Outcome.EQUIVALENT
+
+
+def compare_range(
+    t_i: Sequence[float],
+    t_j: Sequence[float],
+    qrange: QuantileRange,
+) -> Outcome:
+    """Convenience wrapper taking the ``(q_lower, q_upper)`` tuple."""
+    return compare_measurements(t_i, t_j, qrange[0], qrange[1])

@@ -1,0 +1,156 @@
+"""Convergence-driven incremental measurement (paper Procedure 4,
+``MeasureAndRank``).
+
+Statistically sound comparison needs many repetitions, but measuring every
+variant many times is expensive — the paper's loop adds only ``M`` (2–3)
+measurements per algorithm per iteration, recomputes the mean ranks over the
+quantile ladder, and stops when the *shape* of the rank landscape stabilises:
+
+    x    = mean ranks, sorted ascending
+    dx   = convolution(x, [1, -1])          (first differences)
+    stop when  ||dx - dy||_2 / p  <  eps    (dy = previous iteration's dx)
+
+or when ``N`` reaches the user budget ``max``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .meanrank import mean_ranks
+from .measure import MeasurementStore, Timer
+from .types import (
+    DEFAULT_QUANTILE_RANGES,
+    REPORT_QUANTILE_RANGE,
+    IterationRecord,
+    QuantileRange,
+    RankedAlgorithm,
+    RankingResult,
+)
+
+
+def first_differences(x: Sequence[float]) -> np.ndarray:
+    """``convolution(x, [1, -1], step=1)`` — adjacent mean-rank deltas."""
+    arr = np.asarray(x, dtype=np.float64)
+    if arr.size < 2:
+        return np.zeros(0, dtype=np.float64)
+    return arr[1:] - arr[:-1]
+
+
+def convergence_norm(dx: np.ndarray, dy: np.ndarray, p: int) -> float:
+    """``||dx - dy||_2 / p`` (paper's stopping criterion)."""
+    if dx.shape != dy.shape:
+        raise ValueError(f"dx/dy shape mismatch: {dx.shape} vs {dy.shape}")
+    if p <= 0:
+        raise ValueError("p must be positive")
+    return float(np.linalg.norm(dx - dy) / p)
+
+
+def measure_and_rank(
+    initial_order: Sequence[str],
+    timer: Timer,
+    m_per_iteration: int = 3,
+    eps: float = 0.03,
+    max_measurements: int = 30,
+    quantile_ranges: Sequence[QuantileRange] = DEFAULT_QUANTILE_RANGES,
+    report_range: QuantileRange = REPORT_QUANTILE_RANGE,
+    tie_break: str = "class",
+    store: Optional[MeasurementStore] = None,
+    shuffle_seed: Optional[int] = 0,
+) -> RankingResult:
+    """Procedure 4.
+
+    Parameters
+    ----------
+    initial_order:
+        ``h_0`` — e.g. algorithms sorted by single-run execution time
+        (paper Sec. I step 4) or by FLOP count.
+    timer:
+        Measurement backend (wall-clock, simulated, or cost model).
+    m_per_iteration, eps, max_measurements:
+        ``M``, ``eps``, ``max`` of the paper (defaults = paper Sec. IV).
+    store:
+        Optional pre-populated measurement store (warm-start); new
+        measurements are appended to it.
+    shuffle_seed:
+        Seed for the pre-iteration shuffle (None disables shuffling).
+
+    Returns
+    -------
+    RankingResult with the final ``s_[25,75]`` sequence, mean ranks,
+    convergence flag and full per-iteration history.
+    """
+    order: List[str] = list(initial_order)
+    p = len(order)
+    if p == 0:
+        raise ValueError("need at least one algorithm")
+    store = store if store is not None else MeasurementStore()
+    rng = np.random.default_rng(shuffle_seed) if shuffle_seed is not None else None
+
+    history: List[IterationRecord] = []
+    dy = np.ones(max(p - 1, 0), dtype=np.float64)  # paper: initialize dy_j <- 1
+    norm = float("inf")
+    converged = False
+    n = store.min_count()
+
+    last_result = None
+    while n < max_measurements:
+        for name in order:
+            store.add(name, timer.measure_many(name, m_per_iteration))
+        n = store.min_count()
+        if rng is not None:
+            store.shuffle(rng)
+
+        mr = mean_ranks(
+            order,
+            store.as_mapping(),
+            quantile_ranges=quantile_ranges,
+            report_range=report_range,
+            tie_break=tie_break,
+        )
+        last_result = mr
+        x = np.asarray(mr.ordered_mean_ranks(), dtype=np.float64)
+        dx = first_differences(x)
+        norm = convergence_norm(dx, dy, p)
+        dy = dx
+        order = list(mr.order)  # h_0 <- ordering from s_[25,75]
+
+        history.append(
+            IterationRecord(
+                measurements_per_alg=n,
+                order=tuple(mr.order),
+                ranks=tuple(mr.ranks),
+                mean_ranks=tuple(mr.mean_ranks[name] for name in mr.order),
+                norm=norm,
+            )
+        )
+        if norm < eps:
+            converged = True
+            break
+
+    if last_result is None:
+        # max_measurements smaller than one iteration's worth: measure once.
+        for name in order:
+            store.add(name, timer.measure_many(name, max(1, m_per_iteration)))
+        last_result = mean_ranks(
+            order,
+            store.as_mapping(),
+            quantile_ranges=quantile_ranges,
+            report_range=report_range,
+            tie_break=tie_break,
+        )
+        n = store.min_count()
+
+    sequence = [
+        RankedAlgorithm(name=name, rank=rank, mean_rank=last_result.mean_ranks[name])
+        for name, rank in zip(last_result.order, last_result.ranks)
+    ]
+    return RankingResult(
+        sequence=sequence,
+        mean_ranks=dict(last_result.mean_ranks),
+        measurements_per_alg=n,
+        converged=converged,
+        history=history,
+    )

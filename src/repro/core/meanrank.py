@@ -1,0 +1,91 @@
+"""Mean rank across a quantile ladder (paper Procedure 3, ``MeanRanks``).
+
+A single quantile range either over-merges (wide ranges such as ``(5, 95)``
+cover the distribution tails, so everything overlaps) or over-splits (narrow
+ranges such as ``(35, 65)`` curtail the tails and tiny shifts become
+"significant"). Procedure 3 therefore re-runs the rank-merging sort
+(Procedure 2) on *each* range of a ladder and averages the per-algorithm
+ranks; the mean rank quantifies relative shifts that the single
+``(q25, q75)`` report cannot resolve (paper Table III).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+from .ranking import sort_by_measurements
+from .types import (
+    DEFAULT_QUANTILE_RANGES,
+    REPORT_QUANTILE_RANGE,
+    QuantileRange,
+)
+
+
+@dataclass
+class MeanRankResult:
+    """Ranks at the reporting range + mean ranks across the ladder."""
+
+    order: List[str]                 # sequence from the reporting range, best-first
+    ranks: List[int]                 # performance classes at the reporting range
+    mean_ranks: Dict[str, float]     # mr' per algorithm
+    per_range: Dict[QuantileRange, Dict[str, int]]  # full Table-III style data
+
+    def ordered_mean_ranks(self) -> List[float]:
+        """Mean ranks sorted ascending — the ``x`` vector of Procedure 4."""
+        return sorted(self.mean_ranks.values())
+
+    def sequence(self) -> List[Tuple[str, int, float]]:
+        return [
+            (n, r, self.mean_ranks[n]) for n, r in zip(self.order, self.ranks)
+        ]
+
+
+def mean_ranks(
+    order: Sequence[str],
+    measurements: Mapping[str, Sequence[float]],
+    quantile_ranges: Sequence[QuantileRange] = DEFAULT_QUANTILE_RANGES,
+    report_range: QuantileRange = REPORT_QUANTILE_RANGE,
+    tie_break: str = "class",
+) -> MeanRankResult:
+    """Procedure 3.
+
+    Runs Procedure 2 once per quantile range (always from the same initial
+    hypothesis ``order``, as in the paper), accumulates per-algorithm ranks,
+    and reports the sequence at ``report_range`` together with the mean rank
+    of every algorithm.
+
+    If ``report_range`` is not a member of ``quantile_ranges`` it is evaluated
+    additionally (but not averaged), so callers may e.g. use the left-tail
+    ladder for means while still reporting at the IQR.
+    """
+    per_range: Dict[QuantileRange, Dict[str, int]] = {}
+    totals: Dict[str, float] = {name: 0.0 for name in order}
+
+    for qrange in quantile_ranges:
+        names, ranks = sort_by_measurements(order, measurements, qrange, tie_break)
+        table = dict(zip(names, ranks))
+        per_range[qrange] = table
+        for name in order:
+            totals[name] += table[name]
+
+    n_ranges = len(quantile_ranges)
+    mr = {name: totals[name] / n_ranges for name in order}
+
+    if report_range in per_range:
+        # Re-derive the order at the reporting range.
+        rep_names, rep_ranks = sort_by_measurements(
+            order, measurements, report_range, tie_break
+        )
+    else:
+        rep_names, rep_ranks = sort_by_measurements(
+            order, measurements, report_range, tie_break
+        )
+        per_range = dict(per_range)  # report range shown but not averaged
+
+    return MeanRankResult(
+        order=rep_names,
+        ranks=rep_ranks,
+        mean_ranks=mr,
+        per_range=per_range,
+    )

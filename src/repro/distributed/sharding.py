@@ -1,0 +1,241 @@
+"""Logical-axis sharding rules: DP/FSDP x TP (+ EP/SP) over (pod, data, model).
+
+Models annotate parameters with *logical* axis names; this module maps them
+to mesh axes per architecture and mode:
+
+* ``embed``   -> FSDP over the data-parallel axes (pod, data) — ZeRO-style
+  parameter + optimizer-state sharding;
+* ``vocab``/``ffn``/``q_heads``/``heads``/``moe_ffn`` -> ``model`` (tensor /
+  expert parallelism), subject to divisibility;
+* attention strategy per arch (``head`` / ``head_q`` / ``sequence``): head
+  counts that do not divide the model axis fall back gracefully (DESIGN §5);
+* any rule whose axis sizes do not divide the dimension is dropped for that
+  leaf (replicate fallback) — recorded for the dry-run report.
+
+The mesh axes are data-parallel ``("pod", "data")`` and tensor ``"model"``;
+single-pod meshes simply lack the ``pod`` axis — rules reference axes by
+name and silently skip absent ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import ModelConfig
+
+AxisRule = Optional[Tuple[str, ...]]  # mesh axes assigned to a logical axis
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)])) if dp_axes(mesh) else 1
+
+
+def attention_strategy(cfg: ModelConfig, tp: int) -> str:
+    """head: q+kv heads TP; head_q: q TP + replicated KV (broadcast GQA);
+    sequence: sequence-parallel attention (no head sharding)."""
+    if tp <= 1:
+        return "head"
+    if cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0:
+        return "head"
+    if cfg.n_heads % tp == 0:
+        return "head_q"
+    return "sequence"
+
+
+def expert_strategy(cfg: ModelConfig, tp: int) -> str:
+    """expert: experts over model (EP); tensor: per-expert d_ff over model."""
+    if cfg.n_experts and cfg.n_experts % tp == 0:
+        return "expert"
+    return "tensor"
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: Dict[Optional[str], AxisRule]
+    attention: str
+    experts: str
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+
+    def spec_for(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> PartitionSpec:
+        """PartitionSpec for one leaf, dropping non-dividing rules."""
+        entries: List[AxisRule] = []
+        for ax_name, dim in zip(axes, shape):
+            rule = self.rules.get(ax_name)
+            if rule is None:
+                entries.append(None)
+                continue
+            present = tuple(a for a in rule if a in self.mesh.axis_names)
+            if not present:
+                entries.append(None)
+                continue
+            total = int(np.prod([self.mesh.shape[a] for a in present]))
+            if dim % total != 0:
+                # try prefixes (e.g. ("pod","data") -> ("pod",))
+                chosen: AxisRule = None
+                for k in range(len(present) - 1, 0, -1):
+                    sub = present[:k]
+                    t = int(np.prod([self.mesh.shape[a] for a in sub]))
+                    if dim % t == 0:
+                        chosen = sub
+                        break
+                if chosen is None:
+                    self.fallbacks.append(
+                        f"axis {ax_name!r} dim {dim} !% mesh{present} -> replicated"
+                    )
+                    entries.append(None)
+                else:
+                    self.fallbacks.append(
+                        f"axis {ax_name!r} dim {dim} !% mesh{present} -> {chosen}"
+                    )
+                    entries.append(chosen)
+            else:
+                entries.append(present)
+        return PartitionSpec(*entries)
+
+    def sharding_for(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+
+def make_plan(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    mode: str = "train",          # train | prefill | decode
+    zero3: bool = True,
+) -> ShardingPlan:
+    """Build the logical-axis -> mesh-axes rule table for (arch, mode)."""
+    tp = tp_size(mesh)
+    dpa = dp_axes(mesh)
+    attn = attention_strategy(cfg, tp)
+    exps = expert_strategy(cfg, tp)
+
+    rules: Dict[Optional[str], AxisRule] = {
+        None: None,
+        "layers": None,                       # scan dim, never sharded
+        "vocab": ("model",),
+        "embed": dpa if zero3 else None,      # FSDP / ZeRO-3 storage shard
+        "ffn": ("model",),
+        "moe_ffn": ("model",) if exps == "tensor" else None,
+        "experts": ("model",) if exps == "expert" else None,
+        "heads": ("model",),                  # SSD heads
+        "head_dim": None,
+    }
+    if attn == "head":
+        rules["q_heads"] = ("model",)
+        rules["kv_heads"] = ("model",)
+    elif attn == "head_q":
+        rules["q_heads"] = ("model",)
+        rules["kv_heads"] = None              # replicated KV (broadcast GQA)
+    else:  # sequence-parallel attention
+        rules["q_heads"] = None
+        rules["kv_heads"] = None
+
+    return ShardingPlan(mesh=mesh, rules=rules, attention=attn, experts=exps)
+
+
+def tree_shardings(plan: ShardingPlan, axes_tree: Any, shape_tree: Any) -> Any:
+    """NamedSharding tree matching (axes, shapes) trees leaf-for-leaf."""
+    return jax.tree.map(
+        lambda axes, shape_struct: plan.sharding_for(
+            axes,
+            shape_struct.shape if hasattr(shape_struct, "shape") else shape_struct,
+        ),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+# --------------------------------------------------------- activations -----
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> PartitionSpec:
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    dpa = dp_axes(mesh)
+    if dpa:
+        total = int(np.prod([mesh.shape[a] for a in dpa]))
+        if global_batch % total == 0:
+            return PartitionSpec(dpa, *([None] * extra_dims))
+        for k in range(len(dpa) - 1, 0, -1):
+            t = int(np.prod([mesh.shape[a] for a in dpa[:k]]))
+            if global_batch % t == 0:
+                return PartitionSpec(dpa[:k], *([None] * extra_dims))
+    return PartitionSpec(*([None] * (extra_dims + 1)))
+
+
+def cache_seq_spec(mesh: Mesh, global_batch: int) -> PartitionSpec:
+    """KV-cache sharding [b, S, K, hd]: batch over DP when divisible; the
+    seq dim takes 'model' (+ the DP axes too when batch is too small —
+    long-context decode with batch 1 shards S over every axis)."""
+    dpa = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dpa])) if dpa else 1
+    if dpa and global_batch % dp_total == 0:
+        return PartitionSpec(dpa, ("model",), None, None)
+    return PartitionSpec(None, dpa + ("model",), None, None)
+
+
+def state_specs(
+    cfg: ModelConfig, plan: ShardingPlan, state_shapes: Any, global_batch: int
+) -> Any:
+    """Shardings for the decode-state pytree (KV caches / SSM states).
+
+    KV caches [U, b, S, K, hd] -> batch over DP, seq over model.
+    SSM states [U, b, h, p, n] -> batch over DP, heads over model.
+    Conv states [U, b, k-1, c]  -> batch over DP, channels over model.
+    """
+    mesh = plan.mesh
+    dpa = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dpa])) if dpa else 1
+    batch_ok = dpa and global_batch % dp_total == 0
+    b_rule = dpa if batch_ok else None
+
+    def spec_for_leaf(path: Tuple, leaf) -> NamedSharding:
+        shape = leaf.shape
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        leafname = names[-1] if names else ""
+        if leafname in ("k", "v") and any("kv" in str(n) for n in names):
+            # [U, b, S, K, hd]
+            seq_rule = ("model",) if batch_ok else (dpa + ("model",))
+            seq_rule = _fit(mesh, seq_rule, shape[2])
+            spec = PartitionSpec(None, _fit(mesh, b_rule, shape[1]), seq_rule, None, None)
+        elif leafname == "ssm":
+            h_rule = _fit(mesh, ("model",), shape[2])
+            spec = PartitionSpec(None, _fit(mesh, b_rule, shape[1]), h_rule, None, None)
+        elif names and "conv" in names:
+            c_rule = _fit(mesh, ("model",), shape[3])
+            spec = PartitionSpec(None, _fit(mesh, b_rule, shape[1]), None, c_rule)
+        elif leafname in ("cross_k", "cross_v"):
+            # [L, b, s_enc, K, hd]
+            spec = PartitionSpec(None, _fit(mesh, b_rule, shape[1]), None, None, None)
+        else:
+            spec = PartitionSpec(*([None] * len(shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for_leaf, state_shapes)
+
+
+def _fit(mesh: Mesh, rule: AxisRule, dim: int) -> AxisRule:
+    """Largest prefix of ``rule`` whose product divides ``dim``."""
+    if rule is None:
+        return None
+    present = tuple(a for a in rule if a in mesh.axis_names)
+    while present:
+        total = int(np.prod([mesh.shape[a] for a in present]))
+        if dim % total == 0:
+            return present
+        present = present[:-1]
+    return None

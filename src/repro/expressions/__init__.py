@@ -1,0 +1,83 @@
+"""repro.expressions — Linnea-like variant generation for linear algebra.
+
+Enumerates mathematically equivalent algorithms (parenthesizations ×
+instruction orders, plus beyond-chain identity families) with exact analytic
+FLOP counts and executable JAX implementations. This is the substrate the
+paper's ranking methodology is demonstrated on.
+"""
+
+from .algorithms import (
+    build_algorithm_fn,
+    build_workloads,
+    make_chain_inputs,
+    reference_product,
+    verify_algorithms,
+)
+from .chain import (
+    ChainAlgorithm,
+    algorithms_for_tree,
+    dp_optimal_flops,
+    enumerate_trees,
+    flops_table,
+    generate_chain_algorithms,
+    linear_extensions,
+    tree_dims,
+    tree_flops,
+    tree_label,
+)
+from .generalized import (
+    FAMILIES,
+    ExpressionFamily,
+    ExpressionVariant,
+    bilinear_family,
+    distributive_family,
+    gram_family,
+    solve_family,
+)
+from .instances import (
+    ANOMALY_331,
+    FIG3_75,
+    INSTANCE_A,
+    INSTANCE_B,
+    PAPER_INSTANCES,
+    SMOKE_INSTANCES,
+    ChainInstance,
+    get_instance,
+    instance_grid,
+    random_instance,
+)
+
+__all__ = [
+    "ANOMALY_331",
+    "ChainAlgorithm",
+    "ChainInstance",
+    "ExpressionFamily",
+    "ExpressionVariant",
+    "FAMILIES",
+    "FIG3_75",
+    "INSTANCE_A",
+    "INSTANCE_B",
+    "PAPER_INSTANCES",
+    "SMOKE_INSTANCES",
+    "algorithms_for_tree",
+    "bilinear_family",
+    "build_algorithm_fn",
+    "build_workloads",
+    "distributive_family",
+    "dp_optimal_flops",
+    "enumerate_trees",
+    "flops_table",
+    "generate_chain_algorithms",
+    "get_instance",
+    "gram_family",
+    "instance_grid",
+    "linear_extensions",
+    "make_chain_inputs",
+    "random_instance",
+    "reference_product",
+    "solve_family",
+    "tree_dims",
+    "tree_flops",
+    "tree_label",
+    "verify_algorithms",
+]

@@ -1,0 +1,13 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Each kernel ships three files: <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle).
+Kernels are validated in interpret mode on CPU; on TPU they replace the
+pure-JAX paths (ForwardOptions.attn_impl etc.).
+"""
+
+from .flash_attention.ops import flash_attention
+from .matmul.ops import chain_matmul, matmul
+from .ssd.ops import ssd_mix
+
+__all__ = ["chain_matmul", "flash_attention", "matmul", "ssd_mix"]

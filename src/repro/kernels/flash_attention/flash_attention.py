@@ -1,0 +1,158 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Design (TPU-native, not a CUDA port — DESIGN.md §2):
+
+* grid = (batch*heads, n_q_blocks, n_kv_blocks) with the kv axis innermost:
+  TPU grids execute minor-most sequentially per core, so the online-softmax
+  state (m, l, acc) lives in VMEM scratch that persists across kv steps.
+* BlockSpecs tile q/o to [block_q, d] and k/v to [block_k, d] in VMEM —
+  block sizes default to 128/512, multiples of the 128-lane MXU dimension.
+* causal masking skips fully-masked kv blocks via ``pl.when`` — unlike the
+  pure-JAX chunked scan, masked blocks cost ZERO flops (the dry-run's
+  masked-block waste disappears on the kernel path).
+* accumulation is f32; inputs/outputs bf16 or f32.
+
+Validated in interpret mode against ``ref.flash_attention_ref`` over shape /
+dtype / blocksize sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    logit_cap: Optional[float],
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    q_offset: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal / windowed block-level skip: kv block strictly in the future
+    # (or entirely outside the window) does no work at all.
+    q_lo = iq * block_q + q_offset           # first absolute q position
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window is not None:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)      # [bq, d]
+        k = k_ref[0].astype(jnp.float32)      # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                           # [bq, bk]
+        if logit_cap:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kv_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                    # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)        # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                      # [bq, d]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,                 # [bh, sq, d]
+    k: jax.Array,                 # [bh, skv, d]
+    v: jax.Array,                 # [bh, skv, d]
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    logit_cap: Optional[float] = None,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"seq ({sq},{skv}) must divide blocks ({block_q},{block_k})")
+    nq, nk = sq // block_q, skv // block_k
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=scale,
+        causal=causal,
+        logit_cap=logit_cap,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nk,
+        q_offset=skv - sq if causal else 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, iq, ik: (i, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, iq, ik: (i, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, iq, ik: (i, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, iq, ik: (i, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, d), jnp.float32),   # acc
+            _vmem((block_q, 1), jnp.float32),   # m (running max)
+            _vmem((block_q, 1), jnp.float32),   # l (normaliser)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

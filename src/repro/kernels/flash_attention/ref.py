@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout matches the kernel: q/k/v are head-flattened [bh, s, d]; GQA
+broadcast (kv -> q heads) happens in ops.py before either path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jax.Array,              # [bh, sq, d]
+    k: jax.Array,              # [bh, skv, d]
+    v: jax.Array,              # [bh, skv, d]
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    logit_cap: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    allowed = jnp.ones((sq, skv), bool)
+    if causal:
+        allowed &= kv_pos <= q_pos + (skv - sq)  # offset when sq != skv
+    if window is not None:
+        allowed &= kv_pos > q_pos + (skv - sq) - window
+    s = jnp.where(allowed[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

@@ -1,0 +1,66 @@
+"""Jit'd wrappers: ``matmul`` and ``chain_matmul``.
+
+``chain_matmul`` executes a :class:`repro.expressions.ChainAlgorithm`'s GEMM
+sequence with the Pallas kernel — the paper's algorithms running on the
+TPU-native building block (the kernel-backed variant set for the
+discriminant test at kernel level).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.expressions.chain import ChainAlgorithm
+
+from .matmul import matmul_kernel
+from .ref import matmul_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "use_kernel", "interpret"),
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    use_kernel: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    if use_kernel:
+        return matmul_kernel(
+            a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+    return matmul_ref(a, b)
+
+
+def chain_matmul(
+    alg: ChainAlgorithm,
+    matrices: Sequence[jax.Array],
+    *,
+    use_kernel: bool = True,
+    interpret: bool = False,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jax.Array:
+    """Execute one chain algorithm's instruction sequence with the kernel."""
+    env: Dict[str, jax.Array] = {f"M{i}": m for i, m in enumerate(matrices)}
+    last = None
+    for dest, lhs, rhs in alg.steps:
+        env[dest] = matmul(
+            env[lhs], env[rhs],
+            use_kernel=use_kernel, interpret=interpret,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+        )
+        last = env[dest]
+    assert last is not None
+    return last

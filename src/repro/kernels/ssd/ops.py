@@ -1,0 +1,50 @@
+"""Jit'd wrapper for the SSD chunk kernel: model-layout plumbing.
+
+Takes the Mamba-2 mixer's natural layout (x [b, s, h, p], dt [b, s, h],
+A_log [h], B/C [b, s, g, n]), precomputes the kernel inputs
+(x̄ = dt*x, logda = dt*A, per-head B/C broadcast), and flattens heads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_scan_ref
+from .ssd import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd_mix(
+    x: jax.Array,        # [b, s, h, p]
+    dt: jax.Array,       # [b, s, h] (positive)
+    a_log: jax.Array,    # [h]
+    b_mat: jax.Array,    # [b, s, g, n]
+    c_mat: jax.Array,    # [b, s, g, n]
+    *,
+    chunk: int = 256,
+    use_kernel: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    logda = dt.astype(jnp.float32) * a                    # [b, s, h]
+    xbar = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # head-flatten
+    xf = xbar.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    lf = logda.transpose(0, 2, 1).reshape(b * h, s)
+    bh_mat = jnp.repeat(b_mat, hg, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    ch_mat = jnp.repeat(c_mat, hg, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+
+    if use_kernel:
+        yf = ssd_scan_kernel(xf, lf, bh_mat, ch_mat, chunk=chunk, interpret=interpret)
+    else:
+        yf, _ = ssd_scan_ref(xf, lf, bh_mat, ch_mat)
+    return yf.reshape(b, h, s, p).transpose(0, 2, 1, 3).astype(x.dtype)

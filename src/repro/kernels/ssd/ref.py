@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the sequential (primal) scan.
+
+Layout matches the kernel: head-flattened xbar [bh, s, p], per-token decay
+logs logda [bh, s], B/C broadcast per head [bh, s, n]. (dt scaling and
+A = -exp(A_log) are applied by ops.py before either path.)
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    xbar: jax.Array,     # [bh, s, p] (dt-scaled inputs)
+    logda: jax.Array,    # [bh, s]    (dt * A, negative)
+    b_mat: jax.Array,    # [bh, s, n]
+    c_mat: jax.Array,    # [bh, s, n]
+    init_state: Optional[jax.Array] = None,  # [bh, p, n]
+) -> Tuple[jax.Array, jax.Array]:
+    bh, s, p = xbar.shape
+    n = b_mat.shape[-1]
+
+    def step(state, inp):
+        xt, lt, bt, ct = inp                   # [bh,p], [bh], [bh,n], [bh,n]
+        da = jnp.exp(lt)[:, None, None]        # [bh,1,1]
+        state = state * da + jnp.einsum("bp,bn->bpn", xt, bt)
+        y = jnp.einsum("bpn,bn->bp", state, ct)
+        return state, y
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bh, p, n), jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(xbar.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(logda.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xbar.dtype), final

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+__doc__ = """Multi-pod dry-run: AOT lower + compile every (architecture x
+input-shape) cell on the production meshes, prove memory fits, and extract
+roofline terms.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init, and the dry-run needs 512 placeholder host devices).
+
+Usage (each run writes/updates a JSON report):
+
+    python -m repro.launch.dryrun --mesh single            # 16x16 = 256
+    python -m repro.launch.dryrun --mesh multi             # 2x16x16 = 512
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --list
+
+The single-pod pass feeds the §Roofline table; the multi-pod pass proves the
+'pod' axis shards (data-parallel gradient all-reduce spans pods).
+
+Memory-fit loop: if a train cell's per-device footprint exceeds the HBM
+budget, the microbatch count is doubled and the cell re-lowered — the loop
+records every attempt (this is the 'fix sharding until it fits' evidence).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, SKIPS, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.specs import build_cell
+from repro.models import (
+    decode_flops,
+    param_counts,
+    prefill_flops,
+    training_flops,
+)
+from repro.roofline import analyze, terms_from_counts
+
+HBM_BUDGET_BYTES = 15 * 2**30     # v5e 16GB, ~1GB headroom
+MAX_FIT_ATTEMPTS = 5
+
+DEFAULT_REPORT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                              "reports", "dryrun")
+
+
+def model_flops_for(cfg, shape: ShapeSpec) -> float:
+    if shape.kind == "train":
+        return training_flops(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return prefill_flops(cfg, shape.global_batch, shape.seq_len)
+    return decode_flops(cfg, shape.global_batch, shape.seq_len)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    mesh_label: str,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the report row (or error row)."""
+    shape = SHAPES[shape_name]
+    skip = SKIPS.get((arch, shape_name))
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "skipped", "reason": skip}
+
+    cfg = get_config(arch, smoke=False)
+    overrides = dict(overrides or {})
+    attempts: List[Dict[str, Any]] = []
+    t_start = time.time()
+
+    for attempt in range(MAX_FIT_ATTEMPTS):
+        try:
+            cell = build_cell(arch, cfg, shape, mesh, opts_override=overrides)
+            lowered = cell.lower()
+            compiled = lowered.compile()
+        except Exception as e:  # sharding/compile bug — the thing dry-runs catch
+            return {
+                "arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "attempts": attempts,
+            }
+
+        ma = compiled.memory_analysis()
+        # donated inputs alias outputs; live = args + temps
+        mem = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        attempts.append({
+            "num_microbatches": cell.num_microbatches,
+            "mem_per_dev_gb": round(mem / 2**30, 2),
+            "temp_gb": round(ma.temp_size_in_bytes / 2**30, 2),
+        })
+        if mem <= HBM_BUDGET_BYTES or shape.kind != "train":
+            break
+        # fit loop: double microbatches (halving live activations), capped
+        # at 1 sequence per microbatch
+        from repro.distributed.sharding import dp_size as _dpsz
+
+        b_local = max(shape.global_batch // _dpsz(mesh), 1)
+        cur = overrides.get("num_microbatches", cell.num_microbatches)
+        nxt = min(max(cur * 2, 2), b_local)
+        if nxt == cur:
+            break  # already at the floor; report as-is
+        overrides["num_microbatches"] = nxt
+    else:
+        compiled = None
+
+    if compiled is None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "oom", "attempts": attempts}
+
+    hlo_text = compiled.as_text()
+    hlo_dir = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "../../..", "reports", "hlo"))
+    os.makedirs(hlo_dir, exist_ok=True)
+    import gzip
+
+    hlo_path = os.path.join(hlo_dir, f"{arch}_{shape_name}_{mesh_label}.txt.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(hlo_text)
+    counts = analyze(hlo_text)
+    terms = terms_from_counts(
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_label,
+        kind=shape.kind,
+        n_devices=mesh.devices.size,
+        counts=counts,
+        model_flops_total=model_flops_for(cfg, shape),
+        memory_per_dev_bytes=mem,
+    )
+    row = terms.row()
+    row.update({
+        "status": "ok" if mem <= HBM_BUDGET_BYTES else "ok_overbudget",
+        "attention_strategy": cell.attention_strategy,
+        "num_microbatches": cell.num_microbatches,
+        "notes": list(cell.notes),
+        "fit_attempts": attempts,
+        "compile_s": round(time.time() - t_start, 1),
+        "params_total": param_counts(cfg).total,
+        "params_active": param_counts(cfg).active,
+    })
+    return row
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--arch", default=None, help="one arch (default: all)")
+    p.add_argument("--shape", default=None, help="one shape (default: all)")
+    p.add_argument("--out", default=None, help="report JSON path")
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--override", default=None,
+                   help="JSON dict of opts overrides (perf experiments)")
+    args = p.parse_args()
+
+    if args.list:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                skip = SKIPS.get((a, s))
+                print(f"{a:26s} {s:12s} {'SKIP: ' + skip if skip else 'run'}")
+        return
+
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    label = "2x16x16" if multi else "16x16"
+    print(f"# dry-run mesh {label}: {describe(mesh)}", flush=True)
+
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    overrides = json.loads(args.override) if args.override else None
+
+    out_path = args.out or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "../../..",
+                     f"reports/dryrun_{label}.json")
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    rows: List[Dict[str, Any]] = []
+    if os.path.exists(out_path) and not (args.arch or args.shape):
+        pass  # full rerun replaces the report
+    elif os.path.exists(out_path):
+        rows = [r for r in json.load(open(out_path))
+                if not ((args.arch is None or r["arch"] in archs)
+                        and (args.shape is None or r["shape"] in shapes))]
+
+    for arch in archs:
+        for shape_name in shapes:
+            t0 = time.time()
+            row = run_cell(arch, shape_name, mesh, label, overrides)
+            rows.append(row)
+            status = row["status"]
+            extra = ""
+            if status.startswith("ok"):
+                extra = (f"dom={row['dominant']} frac={row['roofline_fraction']}"
+                         f" mem={row['mem_per_dev_gb']}GB micro={row['num_microbatches']}")
+            elif status == "error":
+                extra = row["error"][:120]
+            elif status == "skipped":
+                extra = row["reason"][:80]
+            print(f"[{time.time()-t0:6.1f}s] {arch:26s} {shape_name:12s} "
+                  f"{status:8s} {extra}", flush=True)
+            json.dump(rows, open(out_path, "w"), indent=1)
+
+    n_ok = sum(r["status"].startswith("ok") for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_err = len(rows) - n_ok - n_skip
+    print(f"# done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {out_path}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Inline the generated roofline/perf tables into EXPERIMENTS.md."""
+
+import os
+import re
+
+from repro.launch.report_md import perf_table, roofline_table
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../.."))
+PATH = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def main() -> None:
+    text = open(PATH).read()
+    text = text.replace(
+        "<!-- ROOFLINE_TABLE_16x16 -->", roofline_table("16x16").rstrip()
+    )
+    text = text.replace(
+        "<!-- ROOFLINE_TABLE_2x16x16 -->", roofline_table("2x16x16").rstrip()
+    )
+    text = text.replace("<!-- PERF_TABLE -->", perf_table().rstrip())
+    open(PATH, "w").write(text)
+    print("EXPERIMENTS.md tables inlined")
+
+
+if __name__ == "__main__":
+    main()

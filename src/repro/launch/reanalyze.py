@@ -1,0 +1,60 @@
+"""Re-derive roofline rows from cached dry-run HLO (no recompile).
+
+    python -m repro.launch.reanalyze [--mesh single|multi]
+
+Reads reports/hlo/<arch>_<shape>_<mesh>.txt.gz written by dryrun.py and
+rewrites the matching report rows with the CURRENT analyzer — analyzer
+iterations (the §Perf loop) never pay the compile cost twice.
+"""
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import model_flops_for
+from repro.roofline import analyze, terms_from_counts
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../.."))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    args = p.parse_args()
+    label = "2x16x16" if args.mesh == "multi" else "16x16"
+    n_dev = 512 if args.mesh == "multi" else 256
+    report = os.path.join(ROOT, f"reports/dryrun_{label}.json")
+    rows = json.load(open(report))
+    for row in rows:
+        if not row.get("status", "").startswith("ok"):
+            continue
+        path = os.path.join(ROOT, "reports/hlo",
+                            f"{row['arch']}_{row['shape']}_{label}.txt.gz")
+        if not os.path.exists(path):
+            print(f"missing HLO for {row['arch']}/{row['shape']}; skipped")
+            continue
+        counts = analyze(gzip.open(path, "rt").read())
+        cfg = get_config(row["arch"], smoke=False)
+        shape = SHAPES[row["shape"]]
+        terms = terms_from_counts(
+            arch=row["arch"], shape=row["shape"], mesh_desc=label,
+            kind=shape.kind, n_devices=n_dev, counts=counts,
+            model_flops_total=model_flops_for(cfg, shape),
+            memory_per_dev_bytes=row["mem_per_dev_gb"] * 2**30,
+        )
+        keep = {k: row[k] for k in (
+            "status", "attention_strategy", "num_microbatches", "notes",
+            "fit_attempts", "compile_s", "params_total", "params_active",
+        ) if k in row}
+        row.clear()
+        row.update(terms.row())
+        row.update(keep)
+        print(f"reanalyzed {row['arch']:26s} {row['shape']:12s} "
+              f"dom={row['dominant']} frac={row['roofline_fraction']}")
+    json.dump(rows, open(report, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

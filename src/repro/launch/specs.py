@@ -1,0 +1,401 @@
+"""Per-cell lowering plans: (architecture x input-shape x mesh) -> a
+jittable step with fully specified in/out shardings and ShapeDtypeStruct
+arguments (no device allocation — the shannon/kernels dry-run pattern).
+
+``build_cell`` returns a :class:`CellPlan` whose ``lower()`` produces the
+jax ``Lowered`` artifact for ``train_step`` / ``prefill`` / ``serve_step``
+as the shape's kind dictates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import (
+    batch_spec,
+    dp_axes,
+    dp_size,
+    make_plan,
+    state_specs,
+    tree_shardings,
+    tp_size,
+)
+from repro.models import (
+    ForwardOptions,
+    ModelConfig,
+    init_encdec_params,
+    init_encdec_state,
+    init_lm_params,
+    init_lm_state,
+)
+from repro.serve.engine import make_prefill, make_serve_step
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.trainer import (
+    LossConfig,
+    TrainState,
+    init_train_state,
+    make_train_step,
+)
+
+Pytree = Any
+
+#: Activation budget for remat-saved unit inputs per device; drives the
+#: microbatch count heuristic.
+SAVED_ACT_BUDGET_BYTES = 2 << 30
+
+
+def _shape_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_shapes(cfg: ModelConfig) -> Tuple[Pytree, Pytree]:
+    """(ShapeDtypeStruct tree, logical-axes tree) with ZERO allocation.
+
+    The logical-axes tree contains static string tuples that ``eval_shape``
+    cannot return, so it is captured by side effect during the single trace.
+    """
+    box: Dict[str, Any] = {}
+    init = init_encdec_params if cfg.is_encoder_decoder else init_lm_params
+
+    def f(key):
+        values, axes = init(cfg, key)
+        box["axes"] = axes
+        return values
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def pick_microbatches(
+    cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, seq_sharded: bool
+) -> int:
+    """Smallest divisor of the per-DP-group batch whose remat-saved
+    activations fit the per-device budget."""
+    dpn = dp_size(mesh)
+    b_local = max(shape.global_batch // dpn, 1)
+    tp = tp_size(mesh) if seq_sharded else 1
+    per_seq = shape.seq_len * cfg.d_model * 2  # bf16 residual stream
+    for n_micro in [d for d in range(1, b_local + 1) if b_local % d == 0]:
+        saved = cfg.n_units * (b_local // n_micro) * per_seq / tp
+        if saved <= SAVED_ACT_BUDGET_BYTES:
+            return n_micro
+    return b_local
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: ShapeSpec
+    mesh: Mesh
+    cfg: ModelConfig
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # pure step function
+    args: Tuple[Pytree, ...]       # ShapeDtypeStruct trees
+    in_shardings: Tuple[Pytree, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    num_microbatches: int = 1
+    attention_strategy: str = ""
+    notes: Tuple[str, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return jitted.lower(*self.args)
+
+
+def _named(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _replicated(mesh: Mesh, tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda x: _named(mesh, PartitionSpec(*([None] * len(x.shape)))), tree
+    )
+
+
+def build_cell(
+    arch: str,
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    opts_override: Optional[Dict[str, Any]] = None,
+) -> CellPlan:
+    if shape.kind == "train":
+        return _build_train_cell(arch, cfg, shape, mesh, opts_override or {})
+    if shape.kind == "prefill":
+        return _build_prefill_cell(arch, cfg, shape, mesh, opts_override or {})
+    return _build_decode_cell(arch, cfg, shape, mesh, opts_override or {})
+
+
+# ------------------------------------------------------------------ train --
+
+def _sharding_opts(cfg, shape, mesh, plan, overrides, training: bool):
+    """Boundary/interior/attention sharding choices (DESIGN.md §5)."""
+    notes = []
+    tp = tp_size(mesh)
+    dpa = dp_axes(mesh)
+    dpn = dp_size(mesh)
+    b, s = shape.global_batch, shape.seq_len
+
+    b_rule = dpa if (dpa and b % dpn == 0) else None
+    # Megatron-SP: carry seq-sharded over model => remat-saved activations
+    # divide by tp. Interior re-gathers (AG fwd + AG in remat recompute;
+    # the trailing constraint turns the last all-reduce into an RS).
+    boundary = interior = None
+    if training and overrides.get("sp_boundary", True) and s % tp == 0:
+        boundary = _named(mesh, PartitionSpec(b_rule, ("model",), None))
+        interior = _named(mesh, PartitionSpec(b_rule, None, None))
+        notes.append("SP: carry seq-sharded over model; interior gathered")
+
+    # Attention core for archs whose heads don't divide tp: sequence-shard
+    # the QUERIES over 'model' (scores [b, H, sq/tp, skv]) with K/V
+    # replicated — head-count-agnostic, no batch reshard, exact FLOPs split.
+    attn_q = attn_kv = None
+    attn_q_block = 0
+    gqa_mode = "broadcast" if plan.attention == "head_q" else "grouped"
+    if plan.attention == "sequence" and s % tp == 0:
+        attn_q = _named(mesh, PartitionSpec(b_rule, ("model",), None, None))
+        attn_kv = _named(mesh, PartitionSpec(b_rule, None, None, None))
+        notes.append("attention q seq-sharded over model, K/V replicated")
+        if not training:
+            # prefill at 32k: kv-only chunking keeps peak scores bounded
+            # without q-dim dynamic slicing over the sharded axis.
+            attn_q_block = -1
+    # nothing here for sequence strategy beyond the above
+    elif plan.attention in ("head", "head_q"):
+        # Pin the attention-core layout to head-sharded. Without the pin,
+        # GSPMD mixes head-sharded forward with seq-sharded backward and
+        # inserts all-to-all layout ping-pong + f32 rematerialisations
+        # (audited on granite-8b train_4k: ~460 GB/device of avoidable
+        # traffic). The constraint applies after the broadcast repeat, so
+        # K/V carry H heads in head_q mode too.
+        head_spec = _named(mesh, PartitionSpec(b_rule, None, ("model",), None))
+        attn_q = head_spec
+        attn_kv = head_spec if gqa_mode == "broadcast" else (
+            head_spec if cfg.n_kv_heads % tp == 0 else None
+        )
+        notes.append("attention core pinned head-sharded")
+    return boundary, interior, attn_q, attn_kv, attn_q_block, gqa_mode, notes
+
+
+def _moe_compute_shardings(cfg, mesh, plan):
+    """Compute-time expert-weight pin — REFUTED in §Perf iterations it3/it4
+    (qwen2-moe train_4k): replicating the ZeRO 'data' shard of d_model at
+    use forced GSPMD into fully replicated expert compute (HLO FLOPs x6.4,
+    bytes x5.6). Mechanism retained for experimentation; returns None so the
+    default path lets GSPMD resolve the contraction (partial-sum ARs, which
+    measured CHEAPER than the forced gather)."""
+    return None
+
+
+def _build_train_cell(arch, cfg, shape, mesh, overrides) -> CellPlan:
+    plan = make_plan(cfg, mesh, mode="train")
+    boundary, interior, attn_q, attn_kv, attn_q_block, gqa_mode, notes = _sharding_opts(
+        cfg, shape, mesh, plan, overrides, training=True
+    )
+
+    b_local = max(shape.global_batch // dp_size(mesh), 1)
+    n_micro = overrides.get(
+        "num_microbatches",
+        pick_microbatches(cfg, shape, mesh, boundary is not None),
+    )
+    n_micro = min(n_micro, b_local)  # cannot split below 1 seq/microbatch
+    # Training attention default: 'reference' up to 8k — with heads sharded
+    # the score matrix is ~1-2 GB ephemeral, whereas the chunked nested-scan
+    # BACKWARD materialises every block's scores as saved residuals (audited:
+    # ~13 GB/unit on granite-8b). Beyond 8k, chunked (the Pallas kernel path
+    # on real TPU has a flash backward and wins everywhere).
+    default_attn = "reference" if shape.seq_len <= 8192 else "chunked"
+    opts = ForwardOptions(
+        attn_impl=overrides.get("attn_impl", default_attn),
+        moe_dispatch=overrides.get("moe_dispatch", "gather"),
+        mamba_impl="chunked",
+        remat=overrides.get("remat", "full"),
+        gqa_mode=overrides.get("gqa_mode", gqa_mode),
+        boundary_sharding=boundary,
+        interior_sharding=interior,
+        attn_q_sharding=attn_q,
+        attn_kv_sharding=attn_kv,
+        attn_q_block=overrides.get("attn_q_block", attn_q_block),
+        moe_compute_shardings=_moe_compute_shardings(cfg, mesh, plan),
+    )
+
+    # ---- shapes (zero allocation) ----
+    params_s, axes = param_shapes(cfg)
+    optimizer = AdamW(schedule=cosine_schedule(3e-4, 2000, 100_000))
+    state_s = jax.eval_shape(
+        lambda p: init_train_state(cfg, optimizer, p), params_s
+    )
+
+    param_sh = tree_shardings(plan, axes, params_s)
+    # optimizer state shares the param shardings leaf-for-leaf; step scalar
+    # replicated.
+    opt_sh = type(state_s.opt)(
+        step=_named(mesh, PartitionSpec()),
+        master=param_sh,
+        mu=param_sh,
+        nu=param_sh,
+    )
+    state_sh = TrainState(params=param_sh, opt=opt_sh)
+
+    b, s = shape.global_batch, shape.seq_len
+    bspec = batch_spec(mesh, b, extra_dims=1)
+    batch_s: Dict[str, Any] = {}
+    batch_sh: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        batch_s["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        batch_sh["enc_embeds"] = _named(mesh, batch_spec(mesh, b, extra_dims=2))
+        batch_s["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch_sh["tokens"] = _named(mesh, bspec)
+    elif cfg.frontend == "vision_stub":
+        batch_s["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch_sh["embeds"] = _named(mesh, batch_spec(mesh, b, extra_dims=2))
+        notes.append("vlm: precomputed patch+token embeddings enter as 'embeds'")
+    else:
+        batch_s["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        batch_sh["tokens"] = _named(mesh, bspec)
+    batch_s["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch_sh["labels"] = _named(mesh, bspec)
+
+    step = make_train_step(cfg, optimizer, opts, LossConfig(), num_microbatches=n_micro)
+
+    metrics_sh = None  # let XLA choose for the small metric scalars
+    return CellPlan(
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        cfg=cfg,
+        kind="train",
+        fn=step,
+        args=(state_s, batch_s),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        num_microbatches=n_micro,
+        attention_strategy=plan.attention,
+        notes=tuple(notes + plan.fallbacks),
+    )
+
+
+# ---------------------------------------------------------------- prefill --
+
+def _build_prefill_cell(arch, cfg, shape, mesh, overrides) -> CellPlan:
+    plan = make_plan(cfg, mesh, mode="prefill")
+    b, s = shape.global_batch, shape.seq_len
+    _, _, attn_q, attn_kv, attn_q_block, gqa_mode, notes = _sharding_opts(
+        cfg, shape, mesh, plan, overrides, training=False
+    )
+
+    opts = ForwardOptions(
+        attn_impl=overrides.get("attn_impl", "chunked"),
+        moe_dispatch=overrides.get("moe_dispatch", "gather"),
+        mamba_impl="chunked",
+        gqa_mode=overrides.get("gqa_mode", gqa_mode),
+        attn_q_sharding=attn_q,
+        attn_kv_sharding=attn_kv,
+        attn_q_block=overrides.get("attn_q_block", attn_q_block),
+        moe_compute_shardings=_moe_compute_shardings(cfg, mesh, plan),
+    )
+
+    if cfg.is_encoder_decoder:
+        params_s, axes = param_shapes(cfg)
+        state_s = jax.eval_shape(
+            lambda: init_encdec_state(cfg, b, s, cfg.encoder_seq)
+        )
+        fn = make_prefill(cfg, opts)
+        enc_s = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        param_sh = tree_shardings(plan, axes, params_s)
+        st_sh = state_specs(cfg, plan, state_s, b)
+        args = (params_s, state_s, enc_s)
+        in_sh = (param_sh, st_sh, _named(mesh, batch_spec(mesh, b, extra_dims=2)))
+        out_sh = st_sh
+        donate = (1,)
+    else:
+        params_s, axes = param_shapes(cfg)
+        state_s = jax.eval_shape(lambda: init_lm_state(cfg, b, s))
+        fn = make_prefill(cfg, opts)
+        param_sh = tree_shardings(plan, axes, params_s)
+        st_sh = state_specs(cfg, plan, state_s, b)
+        if cfg.frontend == "vision_stub":
+            in_s = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+            in_batch_sh = _named(mesh, batch_spec(mesh, b, extra_dims=2))
+            fn = functools.partial(_prefill_embeds, fn)
+            args = (params_s, state_s, in_s)
+            notes.append("vlm prefill via precomputed embeds")
+        else:
+            in_s = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            in_batch_sh = _named(mesh, batch_spec(mesh, b, extra_dims=1))
+            args = (params_s, state_s, in_s)
+        in_sh = (param_sh, st_sh, in_batch_sh)
+        out_sh = (None, st_sh)
+        donate = (1,)
+
+    return CellPlan(
+        arch=arch, shape=shape, mesh=mesh, cfg=cfg, kind="prefill",
+        fn=fn, args=args, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=donate,
+        attention_strategy=plan.attention,
+        notes=tuple(notes + plan.fallbacks),
+    )
+
+
+def _prefill_embeds(prefill_fn, params, state, embeds):
+    return prefill_fn(params, state, tokens=None, embeds=embeds)
+
+
+# ----------------------------------------------------------------- decode --
+
+def _build_decode_cell(arch, cfg, shape, mesh, overrides) -> CellPlan:
+    plan = make_plan(cfg, mesh, mode="decode")
+    notes = []
+    b, s = shape.global_batch, shape.seq_len
+
+    opts = ForwardOptions(
+        moe_dispatch=overrides.get("moe_dispatch", "gather"),
+        moe_compute_shardings=_moe_compute_shardings(
+            cfg, mesh, make_plan(cfg, mesh, mode="decode")
+        ),
+    )
+    fn = make_serve_step(cfg, opts)
+
+    if cfg.is_encoder_decoder:
+        params_s, axes = param_shapes(cfg)
+        state_s = jax.eval_shape(
+            lambda: init_encdec_state(cfg, b, s, cfg.encoder_seq)
+        )
+    else:
+        params_s, axes = param_shapes(cfg)
+        state_s = jax.eval_shape(lambda: init_lm_state(cfg, b, s))
+
+    param_sh = tree_shardings(plan, axes, params_s)
+    st_sh = state_specs(cfg, plan, state_s, b)
+    tok_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = _named(mesh, batch_spec(mesh, b, extra_dims=1))
+    len_s = jax.ShapeDtypeStruct((), jnp.int32)
+    len_sh = _named(mesh, PartitionSpec())
+
+    return CellPlan(
+        arch=arch, shape=shape, mesh=mesh, cfg=cfg, kind="decode",
+        fn=fn,
+        args=(params_s, state_s, tok_s, len_s),
+        in_shardings=(param_sh, st_sh, tok_sh, len_sh),
+        out_shardings=(None, st_sh),
+        donate_argnums=(1,),
+        attention_strategy=plan.attention,
+        notes=tuple(notes + plan.fallbacks),
+    )

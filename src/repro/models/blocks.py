@@ -1,0 +1,294 @@
+"""Transformer / Mamba blocks and the repeating pattern unit.
+
+A *unit* is the smallest repeating group of sublayers (see
+``ModelConfig.pattern_unit``); the model scans over stacked unit parameters.
+Every block is a pure function; serving modes thread a state pytree
+(KV caches / SSM states):
+
+* mode="train"    — full sequence, no state.
+* mode="prefill"  — full sequence, writes K/V + final SSM states into state.
+* mode="decode"   — single token, reads+updates state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention,
+    attention_reference,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    project_out,
+    project_qkv,
+    update_kv_cache,
+)
+from .config import FFNKind, LayerKind, ModelConfig, SublayerSpec
+from .layers import Params, apply_mlp, apply_norm, init_mlp, init_norm
+from .mamba2 import apply_mamba, init_mamba
+from .moe import apply_moe, init_moe
+
+BlockState = Optional[Dict[str, Any]]
+
+
+# ------------------------------------------------------------------ init ---
+
+def init_sublayer(cfg: ModelConfig, key: jax.Array, spec: SublayerSpec) -> Params:
+    keys = jax.random.split(key, 6)
+    params: Params = {}
+    if spec.kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        params["attn_norm"] = init_norm(cfg, cfg.d_model)
+        params["attn"] = init_attention(cfg, keys[0])
+        if cfg.post_sublayer_norm:
+            params["attn_post_norm"] = init_norm(cfg, cfg.d_model)
+    else:  # MAMBA
+        params["mamba_norm"] = init_norm(cfg, cfg.d_model)
+        params["mamba"] = init_mamba(cfg, keys[1])
+
+    has_ffn = spec.ffn is FFNKind.MOE or cfg.d_ff > 0
+    if has_ffn and not cfg.parallel_block:
+        params["ffn_norm"] = init_norm(cfg, cfg.d_model)
+    if has_ffn:
+        if spec.ffn is FFNKind.MOE:
+            params["moe"] = init_moe(cfg, keys[2])
+        else:
+            params["mlp"] = init_mlp(cfg, keys[3])
+        if cfg.post_sublayer_norm:
+            params["ffn_post_norm"] = init_norm(cfg, cfg.d_model)
+    return params
+
+
+def init_unit(cfg: ModelConfig, key: jax.Array) -> Params:
+    unit = cfg.pattern_unit()
+    keys = jax.random.split(key, len(unit))
+    return {f"sub{i}": init_sublayer(cfg, keys[i], spec) for i, spec in enumerate(unit)}
+
+
+# ------------------------------------------------------------ attention ----
+
+def _constrain(x, sharding):
+    if sharding is not None:
+        return jax.lax.with_sharding_constraint(x, sharding)
+    return x
+
+
+def _attn_full(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    local: bool,
+    causal: bool,
+    opts,
+    kv_out: Optional[Dict[str, jax.Array]],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence attention; optionally writes the cache (prefill)."""
+    impl = opts.attn_impl
+    q, k, v = project_qkv(cfg, params, x, positions)
+    new_cache = None
+    if kv_out is not None:
+        s = k.shape[1]
+        s_len = kv_out["k"].shape[1]
+        if s_len >= s:
+            new_cache = update_kv_cache(kv_out, k, v, jnp.int32(0))
+        else:
+            # Ring cache (windowed layer): keep the last s_len positions at
+            # their ring slots (position p -> slot p % s_len). The block of
+            # trailing positions wraps once; both segment starts are static.
+            start = s % s_len
+            seg1 = s_len - start
+            k_last, v_last = k[:, -s_len:], v[:, -s_len:]
+            new_cache = update_kv_cache(
+                kv_out, k_last[:, :seg1], v_last[:, :seg1], jnp.int32(start)
+            )
+            if start > 0:
+                new_cache = update_kv_cache(
+                    new_cache, k_last[:, seg1:], v_last[:, seg1:], jnp.int32(0)
+                )
+    if getattr(opts, "gqa_mode", "grouped") == "broadcast" and k.shape[2] != q.shape[2]:
+        # TP-correct GQA when KV is replicated but q heads are sharded:
+        # repeat K/V to H so no [K, g] reshape crosses the sharded head dim.
+        g = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q_sh = getattr(opts, "attn_q_sharding", None)
+    kv_sh = getattr(opts, "attn_kv_sharding", None)
+    q = _constrain(q, q_sh)
+    k = _constrain(k, kv_sh)
+    v = _constrain(v, kv_sh)
+    qb = getattr(opts, "attn_q_block", 0)
+    if causal:
+        o = attention(
+            cfg, q, k, v, local=local, impl=impl,
+            q_block=(q.shape[1] if qb == -1 else (qb or 512)),
+        )
+    else:
+        o = attention_reference(
+            q, k, v, causal=False,
+            window=cfg.sliding_window if local else None,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+    o = _constrain(o, q_sh)
+    return project_out(params, o), new_cache
+
+
+def _attn_decode(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cache_len: jax.Array,
+    local: bool,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    positions = jnp.reshape(cache_len, (1,))  # new token at index cache_len
+    q, k, v = project_qkv(cfg, params, x, positions)
+    s_len = cache["k"].shape[1]
+    kv_positions = None
+    if local and cfg.sliding_window:
+        # Ring buffer: windowed layers allocate only ~window slots. Slot i
+        # holds absolute position p = cache_len - ((cache_len - i) mod S)
+        # (negative => unwritten). K is RoPE'd at its absolute position
+        # before the write, so only the mask needs the ring mapping.
+        write_pos = jnp.mod(cache_len, s_len)
+        cache = update_kv_cache(cache, k, v, write_pos)
+        idx = jnp.arange(s_len)
+        kv_positions = cache_len - jnp.mod(cache_len - idx, s_len)
+    else:
+        cache = update_kv_cache(cache, k, v, cache_len)
+    o = decode_attention(
+        q,
+        cache["k"],
+        cache["v"],
+        cache_len + 1,
+        window=cfg.sliding_window if local else None,
+        logit_cap=cfg.attn_logit_softcap,
+        kv_positions=kv_positions,
+    )
+    return project_out(params, o), cache
+
+
+# ----------------------------------------------------------------- apply ---
+
+def apply_sublayer(
+    cfg: ModelConfig,
+    params: Params,
+    spec: SublayerSpec,
+    x: jax.Array,
+    *,
+    mode: str = "train",                 # train | prefill | decode
+    positions: Optional[jax.Array] = None,
+    state: BlockState = None,
+    cache_len: Optional[jax.Array] = None,
+    causal: bool = True,
+    opts=None,
+) -> Tuple[jax.Array, BlockState, jax.Array]:
+    """Returns (x, new_state_or_None, moe_aux_loss)."""
+    if opts is None:
+        from .model import ForwardOptions
+
+        opts = ForwardOptions()
+    aux = jnp.zeros((), jnp.float32)
+    local = spec.kind is LayerKind.ATTN_LOCAL
+    new_state: Dict[str, Any] = {}
+
+    # ---- mixer ----
+    if spec.kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        h = apply_norm(cfg, params["attn_norm"], x)
+        if mode == "decode":
+            o, kv = _attn_decode(cfg, params["attn"], h, state["kv"], cache_len, local)
+            new_state["kv"] = kv
+        else:
+            kv_out = state["kv"] if mode == "prefill" else None
+            o, kv = _attn_full(
+                cfg, params["attn"], h, positions, local, causal, opts, kv_out
+            )
+            if mode == "prefill":
+                new_state["kv"] = kv
+        if cfg.post_sublayer_norm:
+            o = apply_norm(cfg, params["attn_post_norm"], o)
+        mixer_out: Optional[jax.Array] = None
+        if cfg.parallel_block:
+            mixer_out = o
+        else:
+            x = x + o
+    else:  # MAMBA
+        h = apply_norm(cfg, params["mamba_norm"], x)
+        o, ssm_state, conv_state = apply_mamba(
+            cfg,
+            params["mamba"],
+            h,
+            ssm_state=state.get("ssm") if mode == "decode" else None,
+            conv_state=state.get("conv") if mode == "decode" else None,
+            impl="step" if mode == "decode" else opts.mamba_impl,
+        )
+        if mode in ("decode", "prefill"):
+            new_state["ssm"] = ssm_state
+            new_state["conv"] = conv_state
+        x = x + o
+        mixer_out = None
+
+    # ---- FFN ----
+    has_ffn = spec.ffn is FFNKind.MOE or cfg.d_ff > 0
+    if has_ffn:
+        if cfg.parallel_block:
+            hf = apply_norm(cfg, params["attn_norm"], x)  # shared input norm
+        else:
+            hf = apply_norm(cfg, params["ffn_norm"], x)
+        if spec.ffn is FFNKind.MOE:
+            f, aux = apply_moe(
+                cfg, params["moe"], hf,
+                dispatch=opts.moe_dispatch,
+                shardings=getattr(opts, "moe_compute_shardings", None),
+            )
+        else:
+            f = apply_mlp(cfg, params["mlp"], hf)
+        if cfg.post_sublayer_norm:
+            f = apply_norm(cfg, params["ffn_post_norm"], f)
+        if cfg.parallel_block and mixer_out is not None:
+            x = x + mixer_out + f
+        else:
+            x = x + f
+    elif cfg.parallel_block and mixer_out is not None:
+        x = x + mixer_out
+
+    return x, (new_state if mode in ("decode", "prefill") else None), aux
+
+
+# ----------------------------------------------------------- decode state --
+
+def init_unit_state(
+    cfg: ModelConfig, batch: int, max_len: int, dtype: jnp.dtype
+) -> Dict[str, Any]:
+    """Decode-state pytree for ONE unit (unstacked)."""
+    state: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern_unit()):
+        sub: Dict[str, Any] = {}
+        if spec.kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+            # Windowed layers only ever read the trailing window: allocate a
+            # ring buffer of ~window slots instead of max_len.
+            s_len = max_len
+            if spec.kind is LayerKind.ATTN_LOCAL and cfg.sliding_window:
+                s_len = min(max_len, _round_up(cfg.sliding_window + 1, 128))
+            sub["kv"] = init_kv_cache(
+                batch, s_len, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+            )
+        else:
+            k = cfg.ssm_conv_kernel
+            sub["ssm"] = jnp.zeros(
+                (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            )
+            sub["conv"] = {
+                "x": jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+                "B": jnp.zeros((batch, k - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+                "C": jnp.zeros((batch, k - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+            }
+        state[f"sub{i}"] = sub
+    return state
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

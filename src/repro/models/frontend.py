@@ -1,0 +1,79 @@
+"""Modality frontend stubs (per the brief: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; the frontend provides precomputed
+frame/patch embeddings).
+
+The stubs define the *interface* (shapes/dtypes of the precomputed
+embeddings) plus a deterministic synthetic generator so smoke tests and
+examples can run end-to-end. ``input_specs`` in the launch layer builds
+ShapeDtypeStructs from these for the dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class VisionStubSpec:
+    """LLaVA-NeXT anyres tiling: base 336px grid (24x24 patches = 576) plus
+    up to 4 sub-tiles -> <= 2880 patch embeddings per image. The stub hands
+    the backbone already-projected patch embeddings [n_patches, d_model]."""
+
+    patches_per_tile: int = 576
+    max_tiles: int = 5
+
+    @property
+    def max_patches(self) -> int:
+        return self.patches_per_tile * self.max_tiles
+
+
+@dataclass(frozen=True)
+class AudioStubSpec:
+    """Whisper conv frontend: log-mel [3000, 80] -> two conv1d (stride 1, 2)
+    -> 1500 frame embeddings. The stub hands the encoder the 1500 x d_model
+    frame embeddings directly."""
+
+    n_frames: int = 1500
+
+
+def vision_patch_embeds(
+    cfg: ModelConfig, batch: int, n_patches: int, seed: int = 0
+) -> jax.Array:
+    """Synthetic precomputed patch embeddings [b, n_patches, d_model]."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(
+        key, (batch, n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+    )
+
+
+def audio_frame_embeds(
+    cfg: ModelConfig, batch: int, n_frames: int, seed: int = 0
+) -> jax.Array:
+    """Synthetic precomputed frame embeddings [b, n_frames, d_model]."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(
+        key, (batch, n_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+    )
+
+
+def merge_vision_embeds(
+    cfg: ModelConfig,
+    token_embeds: jax.Array,     # [b, s, d] — text token embeddings
+    patch_embeds: jax.Array,     # [b, p, d] — precomputed patch embeddings
+    patch_offset: int = 0,
+) -> jax.Array:
+    """Splice patch embeddings into the token-embedding sequence at a fixed
+    offset (static layout: <patches><text>, the common packed-VLM layout)."""
+    b, s, d = token_embeds.shape
+    p = patch_embeds.shape[1]
+    if p > s - patch_offset:
+        raise ValueError(f"{p} patches do not fit in seq {s} at offset {patch_offset}")
+    return jax.lax.dynamic_update_slice(
+        token_embeds, patch_embeds.astype(token_embeds.dtype), (0, patch_offset, 0)
+    )

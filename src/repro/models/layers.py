@@ -1,0 +1,224 @@
+"""Primitive layers: params-with-logical-axes, norms, RoPE, MLPs, embeddings.
+
+Parameters are plain nested dicts of arrays. During initialisation each leaf
+is a :class:`P` carrying its *logical axis names* (e.g. ``("embed", "ffn")``);
+:func:`split_params` separates the value tree from the axis tree. The
+distributed layer maps logical axes -> mesh axes (see
+``repro/distributed/sharding.py``), so models never mention mesh axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass
+class P:
+    """A parameter leaf paired with logical axis names (len == ndim)."""
+
+    value: jax.Array
+    axes: Axes
+
+    def __post_init__(self) -> None:
+        if len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank != value rank {self.value.shape}"
+            )
+
+
+def is_p(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def split_params(tree: Any) -> Tuple[Any, Any]:
+    """(values, axes) trees from a tree of :class:`P` leaves."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_p)
+    return values, axes
+
+
+def param_dtype(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def compute_dtype(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ init ---
+
+def normal_init(
+    key: jax.Array,
+    shape: Sequence[int],
+    axes: Axes,
+    dtype: jnp.dtype,
+    stddev: float = 0.02,
+) -> P:
+    v = stddev * jax.random.truncated_normal(key, -2.0, 2.0, tuple(shape), jnp.float32)
+    return P(v.astype(dtype), tuple(axes))
+
+
+def zeros_init(shape: Sequence[int], axes: Axes, dtype: jnp.dtype) -> P:
+    return P(jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+
+def ones_init(shape: Sequence[int], axes: Axes, dtype: jnp.dtype) -> P:
+    return P(jnp.ones(tuple(shape), dtype), tuple(axes))
+
+
+# ----------------------------------------------------------------- norms ---
+
+def init_norm(cfg: ModelConfig, dims: int) -> Params:
+    dt = param_dtype(cfg)
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": ones_init((dims,), ("embed",), dt),
+            "bias": zeros_init((dims,), ("embed",), dt),
+        }
+    # rmsnorm: gemma2 stores (w) and applies (1 + w); init accordingly.
+    if cfg.rms_one_offset:
+        return {"scale": zeros_init((dims,), ("embed",), dt)}
+    return {"scale": ones_init((dims,), ("embed",), dt)}
+
+
+def apply_norm(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    """Norm in f32, cast back to the compute dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        w = params["scale"].astype(jnp.float32)
+        y = y * (1.0 + w) if cfg.rms_one_offset else y * w
+    return y.astype(dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """qwen3 qk-norm: RMS over the head_dim of [..., head_dim]."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Rotate [..., seq, n_heads, head_dim] by position-dependent phases.
+
+    ``positions`` broadcasts against the seq dim: shape [seq] or [batch, seq].
+    """
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., s, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ---
+
+def init_embedding(cfg: ModelConfig, key: jax.Array) -> Params:
+    return {
+        "table": normal_init(
+            key, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), param_dtype(cfg)
+        )
+    }
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["table"].astype(compute_dtype(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype=x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, embed_params: Params, head_params: Optional[Params], x: jax.Array) -> jax.Array:
+    """Project to vocabulary logits (tied or untied head); f32 logits."""
+    if cfg.tie_embeddings:
+        table = embed_params["table"]
+        logits = jnp.einsum(
+            "...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32)
+        )
+    else:
+        assert head_params is not None
+        w = head_params["w"]
+        logits = jnp.einsum(
+            "...d,dv->...v", x.astype(jnp.float32), w.astype(jnp.float32)
+        )
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def init_unembed(cfg: ModelConfig, key: jax.Array) -> Optional[Params]:
+    if cfg.tie_embeddings:
+        return None
+    return {
+        "w": normal_init(
+            key, (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), param_dtype(cfg)
+        )
+    }
+
+
+# ------------------------------------------------------------------- MLP ---
+
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = param_dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out_std = 0.02 / np.sqrt(2 * cfg.n_layers)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi": normal_init(k1, (cfg.d_model, d_ff), ("embed", "ffn"), dt),
+            "wg": normal_init(k2, (cfg.d_model, d_ff), ("embed", "ffn"), dt),
+            "wo": normal_init(k3, (d_ff, cfg.d_model), ("ffn", "embed"), dt, out_std),
+        }
+    return {
+        "wi": normal_init(k1, (cfg.d_model, d_ff), ("embed", "ffn"), dt),
+        "wo": normal_init(k3, (d_ff, cfg.d_model), ("ffn", "embed"), dt, out_std),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == "geglu":
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,267 @@
+"""Mamba-2 mixer via SSD (state-space duality), chunked for TPU.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks of length Q: within a chunk the recurrence is evaluated in its
+*dual* quadratic (attention-like) form — dense [Q, Q] einsums that map onto
+the MXU — while a single ``lax.scan`` over chunk *states* [h, p, n] carries
+the recurrence between chunks. Total cost O(s·Q·p + s·p·n) instead of the
+O(s²) of the naive dual form or the s-step scan of the primal form.
+
+TPU adaptation notes (DESIGN.md §2): chunk length is a VMEM/MXU tile choice
+(default 256, a multiple of 128); the inter-chunk scan has length s/Q so the
+HLO stays small; heads shard over the "model" mesh axis, batch over "data".
+
+The chunk length is *mathematically inert* (any Q gives the same result up
+to fp reassociation) — i.e. equal-FLOPs variants, the paper's regime; the
+autotuner ranks chunk sizes with the ranking methodology.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import P, Params, normal_init, ones_init, zeros_init, param_dtype
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = param_dtype(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv_kernel
+    keys = jax.random.split(key, 10)
+    out_std = 0.02 / np.sqrt(2 * cfg.n_layers)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 default range)
+    rng = np.random.default_rng(42)
+    dt_init = np.exp(
+        rng.uniform(np.log(1e-3), np.log(1e-1), size=(h,))
+    ).astype(np.float32)
+    dt_bias = np.log(np.expm1(dt_init))
+    a_init = rng.uniform(1.0, 16.0, size=(h,)).astype(np.float32)
+    return {
+        "wz": normal_init(keys[0], (d, di), ("embed", "ffn"), dt),
+        "wx": normal_init(keys[1], (d, di), ("embed", "ffn"), dt),
+        "wB": normal_init(keys[2], (d, g * n), ("embed", None), dt),
+        "wC": normal_init(keys[3], (d, g * n), ("embed", None), dt),
+        "wdt": normal_init(keys[4], (d, h), ("embed", "heads"), dt),
+        "conv_x": normal_init(keys[5], (k, di), (None, "ffn"), dt, 0.1),
+        "conv_B": normal_init(keys[6], (k, g * n), (None, None), dt, 0.1),
+        "conv_C": normal_init(keys[7], (k, g * n), (None, None), dt, 0.1),
+        "A_log": P(jnp.asarray(np.log(a_init)), ("heads",)),
+        "D": ones_init((h,), ("heads",), jnp.float32),
+        "dt_bias": P(jnp.asarray(dt_bias), ("heads",)),
+        "norm": ones_init((di,), ("ffn",), dt),
+        "wo": normal_init(keys[8], (di, d), ("ffn", "embed"), dt, out_std),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq. x [b, s, c], w [k, c].
+
+    Returns (y [b, s, c], new_state [b, k-1, c]) — state carries the last
+    k-1 inputs for decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [b, s+k-1, c]
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum_decay(log_a: jax.Array) -> jax.Array:
+    """L[i, j] = exp(sum_{j<t<=i} log_a_t) for i >= j, else 0.
+
+    log_a [..., Q, h] -> L [..., h, Q, Q]. Numerically: difference of
+    cumulative sums, masked before exp.
+    """
+    q = log_a.shape[-2]
+    cum = jnp.cumsum(log_a, axis=-2)                      # [..., Q, h]
+    cum = jnp.moveaxis(cum, -1, -2)                       # [..., h, Q]
+    diff = cum[..., :, None] - cum[..., None, :]          # [..., h, Q, Q]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(
+    x: jax.Array,       # [b, s, h, p]   (dt-scaled inputs NOT yet applied)
+    dt: jax.Array,      # [b, s, h]      (positive step sizes)
+    a_log: jax.Array,   # [h]            (A = -exp(a_log))
+    b_mat: jax.Array,   # [b, s, g, n]
+    c_mat: jax.Array,   # [b, s, g, n]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [b, h, p, n]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [b, s, h, p], final_state [b, h, p, n])."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # [h], negative
+    log_da = dt.astype(jnp.float32) * a                    # [b, s, h]
+    xbar = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views
+    xc = xbar.reshape(bsz, nc, chunk, h, p)
+    dac = log_da.reshape(bsz, nc, chunk, h)
+    bc = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    cc = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+
+    # ---- intra-chunk (dual quadratic form) ----
+    decay = _segsum_decay(dac)                             # [b, nc, h, Q, Q]
+    cb = jnp.einsum("bzign,bzjgn->bzgij", cc, bc)          # [b, nc, g, Q, Q]
+    cb = jnp.repeat(cb, hg, axis=2)                        # [b, nc, h, Q, Q]
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", cb * decay, xc)
+
+    # ---- per-chunk state contribution ----
+    cum = jnp.cumsum(dac, axis=2)                          # [b, nc, Q, h]
+    total = cum[:, :, -1:, :]                              # [b, nc, 1, h]
+    decay_to_end = jnp.exp(total - cum)                    # [b, nc, Q, h]
+    # state_k = sum_j exp(sum_{j<t<=Q} log_da_t) * xbar_j ⊗ B_j
+    if g == 1:
+        s_chunk = jnp.einsum(
+            "bzjh,bzjhp,bzjn->bzhpn", decay_to_end, xc, bc[:, :, :, 0, :]
+        )
+    else:
+        bfull = jnp.repeat(bc, hg, axis=3)                 # [b, nc, Q, h, n]
+        s_chunk = jnp.einsum("bzjh,bzjhp,bzjhn->bzhpn", decay_to_end, xc, bfull)
+
+    # ---- inter-chunk recurrence over states ----
+    chunk_decay = jnp.exp(total[:, :, 0, :])               # [b, nc, h]
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(state, inp):
+        cd, sc = inp                                       # [b,h], [b,h,p,n]
+        prev = state
+        state = state * cd[..., None, None] + sc
+        return state, prev
+
+    states_seq = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0))
+    final_state, prev_states = jax.lax.scan(step, s0, states_seq)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [b, nc, h, p, n]
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cum)                        # [b, nc, Q, h]
+    if g == 1:
+        y_inter = jnp.einsum(
+            "bzin,bzih,bzhpn->bzihp",
+            cc[:, :, :, 0, :],
+            decay_from_start,
+            prev_states,
+        )
+    else:
+        cfull = jnp.repeat(cc, hg, axis=3)                 # [b, nc, Q, h, n]
+        y_inter = jnp.einsum(
+            "bzihn,bzih,bzhpn->bzihp", cfull, decay_from_start, prev_states
+        )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(
+    x: jax.Array, dt: jax.Array, a_log: jax.Array,
+    b_mat: jax.Array, c_mat: jax.Array,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (primal) scan oracle — one step per token."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [b,h,p], [b,h], [b,g,n], [b,g,n]
+        da = jnp.exp(dtt * a[None])                        # [b, h]
+        bt_h = jnp.repeat(bt, hg, axis=1)                  # [b, h, n]
+        ct_h = jnp.repeat(ct, hg, axis=1)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt_h
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct_h)
+        return state, y
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def apply_mamba(
+    cfg: ModelConfig,
+    params: Params,
+    xin: jax.Array,               # [b, s, d]
+    ssm_state: Optional[jax.Array] = None,
+    conv_state: Optional[Dict[str, jax.Array]] = None,
+    impl: str = "chunked",
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Full Mamba-2 mixer. Returns (y [b,s,d], ssm_state, conv_state)."""
+    b, s, d = xin.shape
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z = jnp.einsum("bsd,di->bsi", xin, params["wz"].astype(xin.dtype))
+    xr = jnp.einsum("bsd,di->bsi", xin, params["wx"].astype(xin.dtype))
+    br = jnp.einsum("bsd,dn->bsn", xin, params["wB"].astype(xin.dtype))
+    cr = jnp.einsum("bsd,dn->bsn", xin, params["wC"].astype(xin.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", xin, params["wdt"].astype(xin.dtype))
+
+    cs_in = conv_state or {}
+    xr, cs_x = _causal_conv(xr, params["conv_x"].astype(xin.dtype), cs_in.get("x"))
+    br, cs_b = _causal_conv(br, params["conv_B"].astype(xin.dtype), cs_in.get("B"))
+    cr, cs_c = _causal_conv(cr, params["conv_C"].astype(xin.dtype), cs_in.get("C"))
+    new_conv_state = {"x": cs_x, "B": cs_b, "C": cs_c}
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    xh = xr.reshape(b, s, h, p)
+    bm = br.reshape(b, s, g, n)
+    cm = cr.reshape(b, s, g, n)
+
+    if impl == "chunked" and s > 1:
+        chunk = min(cfg.ssm_chunk, s)
+        if s % chunk != 0:
+            chunk = 1 << int(np.floor(np.log2(s)))
+            chunk = max(1, min(chunk, s))
+            while s % chunk != 0:
+                chunk //= 2
+        y, final_state = ssd_chunked(xh, dt, params["A_log"], bm, cm, chunk, ssm_state)
+    else:
+        y, final_state = ssd_reference(xh, dt, params["A_log"], bm, cm, ssm_state)
+
+    # skip connection D, gate, norm, out-projection
+    y = y + xh.astype(y.dtype) * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["norm"].astype(jnp.float32)
+    y = yf.astype(xin.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(xin.dtype))
+    return out, final_state, new_conv_state

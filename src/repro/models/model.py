@@ -1,0 +1,487 @@
+"""Model assembly: decoder LMs (dense/MoE/hybrid/SSM) and encoder-decoder.
+
+The layer stack is a ``lax.scan`` over *stacked unit parameters* (leading
+axis ``n_units``), so the lowered HLO contains one unit body regardless of
+depth — essential for 512-device AOT compile times. Remat (activation
+checkpointing) wraps the unit body with a configurable policy.
+
+Public entry points (pure functions over param pytrees):
+
+* ``init_lm_params`` / ``lm_forward``        — training / scoring forward
+* ``init_lm_state`` / ``lm_prefill`` / ``lm_decode_step`` — serving
+* ``init_encdec_params`` / ``encdec_forward`` / ``encdec_prefill`` /
+  ``encdec_decode_step``                      — whisper-style enc-dec
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_reference,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    project_out,
+    project_qkv,
+    update_kv_cache,
+)
+from .blocks import apply_sublayer, init_unit, init_unit_state
+from .config import FFNKind, LayerKind, ModelConfig, SublayerSpec
+from .layers import (
+    P,
+    Params,
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    init_unembed,
+    normal_init,
+    param_dtype,
+    split_params,
+    unembed,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": None,  # jax.checkpoint default: save nothing
+    "dots": "dots",
+    "dots_no_batch": "dots_no_batch",
+}
+
+
+def _remat_policy(name: str):
+    if name in ("none", "full"):
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if name == "dots_no_batch":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+class ForwardOptions(NamedTuple):
+    attn_impl: str = "auto"         # auto | reference | chunked
+    moe_dispatch: str = "gather"    # gather | dense
+    mamba_impl: str = "chunked"     # chunked | reference
+    remat: str = "none"             # none | full | dots | dots_no_batch
+    # GQA contraction order: "grouped" keeps K/V at kv-head granularity
+    # (valid sharding when kv_heads % tp == 0); "broadcast" repeats K/V to
+    # H query heads (the TP-correct form when KV is replicated — equal
+    # FLOPs, more memory traffic: the paper's equal-FLOPs variant regime).
+    gqa_mode: str = "grouped"
+    # Megatron-SP: the scan carry (residual stream at unit boundaries) is
+    # sequence-sharded over 'model' so remat-saved activations divide by tp;
+    # the unit interior re-gathers (the AG/RS pair replaces the classic
+    # per-sublayer all-reduce). None = let GSPMD propagate.
+    boundary_sharding: Optional[Any] = None   # e.g. [b(dp), s(model), d]
+    interior_sharding: Optional[Any] = None   # e.g. [b(dp), s, d]
+    # Attention-core resharding for archs whose heads don't divide tp:
+    # sequence-shard the QUERIES over 'model' (scores [b, H, sq/tp, skv])
+    # with K/V replicated — head-count-agnostic attention parallelism.
+    attn_q_sharding: Optional[Any] = None     # [b, s, heads, hd] for q + out
+    attn_kv_sharding: Optional[Any] = None    # [b, s, kv_heads, hd] for k/v
+    # kv-only chunking (q unchunked) for seq-sharded prefill: q_block == -1
+    attn_q_block: int = 0                     # 0 = impl default
+    # Compute-time expert-weight shardings (ZeRO-3 gather-at-use pin):
+    # dict {wi, wg, wo} -> NamedSharding, or None.
+    moe_compute_shardings: Optional[Any] = None
+
+
+def _constrain(x: jax.Array, sharding: Optional[Any]) -> jax.Array:
+    if sharding is not None:
+        return jax.lax.with_sharding_constraint(x, sharding)
+    return x
+
+
+# ------------------------------------------------------------------ init ---
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def init_lm_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Any]:
+    """(values, axes): embedding + stacked units + final norm (+ lm head).
+
+    Stacked unit leaves get a leading ``layers`` logical axis (the scan dim,
+    never mesh-sharded).
+    """
+    cfg.validate()
+    k_embed, k_units, k_head = jax.random.split(key, 3)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+
+    units_p = [init_unit(cfg, uk) for uk in unit_keys]
+    split_units = [split_params(u) for u in units_p]
+    unit_values = _stack_trees([v for v, _ in split_units])
+    axes0 = split_units[0][1]
+    unit_axes = jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes0,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+    embed_v, embed_a = split_params(init_embedding(cfg, k_embed))
+    norm_v, norm_a = split_params(init_norm(cfg, cfg.d_model))
+
+    values: Params = {"embed": embed_v, "units": unit_values, "final_norm": norm_v}
+    axes: Params = {"embed": embed_a, "units": unit_axes, "final_norm": norm_a}
+
+    head_p = init_unembed(cfg, k_head)
+    if head_p is not None:
+        head_v, head_a = split_params(head_p)
+        values["lm_head"] = head_v
+        axes["lm_head"] = head_a
+    return values, axes
+
+
+# -------------------------------------------------------------- forward ---
+
+def lm_forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Optional[jax.Array] = None,      # [b, s] int32
+    embeds: Optional[jax.Array] = None,      # [b, s, d] (VLM/audio stubs)
+    opts: ForwardOptions = ForwardOptions(),
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [b, s, vocab] f32, moe_aux)."""
+    unit = cfg.pattern_unit()
+    if embeds is None:
+        assert tokens is not None
+        x = embed_tokens(cfg, params["embed"], tokens)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def unit_body(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        # Pin the checkpoint-saved input's sharding BEFORE the interior
+        # gather — otherwise GSPMD propagates the gathered sharding onto the
+        # remat-saved carry stack (verified: 16x activation-memory blowup).
+        x = _constrain(x, opts.boundary_sharding)
+        x = _constrain(x, opts.interior_sharding)
+        for i, spec in enumerate(unit):
+            x, _, a = apply_sublayer(
+                cfg, unit_params[f"sub{i}"], spec, x,
+                mode="train",
+                positions=positions,
+                opts=opts,
+            )
+            aux = aux + a
+        return _constrain(x, opts.boundary_sharding), aux
+
+    if opts.remat != "none":
+        unit_body = jax.checkpoint(unit_body, policy=_remat_policy(opts.remat))
+
+    x = _constrain(x, opts.boundary_sharding)
+    x, auxes = jax.lax.scan(unit_body, x, params["units"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits, jnp.sum(auxes)
+
+
+# --------------------------------------------------------------- serving ---
+
+def init_lm_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Stacked decode state: one unit state replicated to n_units."""
+    unit_state = init_unit_state(cfg, batch, max_len, jnp.dtype(cfg.dtype))
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_units,) + x.shape),
+        unit_state,
+    )
+
+
+def lm_prefill(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict[str, Any],
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    opts: ForwardOptions = ForwardOptions(),
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Populate the cache from a prompt (cache_len 0 at entry).
+
+    Returns (last-token logits [b, vocab] f32, new state).
+    """
+    unit = cfg.pattern_unit()
+    if embeds is None:
+        x = embed_tokens(cfg, params["embed"], tokens)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def scan_step(x, unit_in):
+        unit_params, unit_state = unit_in
+        x = _constrain(x, opts.interior_sharding)
+        new_state = {}
+        for i, spec in enumerate(unit):
+            x, sub_state, _ = apply_sublayer(
+                cfg, unit_params[f"sub{i}"], spec, x,
+                mode="prefill",
+                positions=positions,
+                state=unit_state[f"sub{i}"],
+                opts=opts,
+            )
+            new_state[f"sub{i}"] = sub_state
+        return _constrain(x, opts.boundary_sharding), new_state
+
+    x, new_states = jax.lax.scan(scan_step, x, (params["units"], state))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], params.get("lm_head"), x[:, -1:, :])
+    return logits[:, 0, :], new_states
+
+
+def lm_decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict[str, Any],
+    tokens: jax.Array,          # [b, 1] int32 — the newest token
+    cache_len: jax.Array,       # scalar int32 — tokens already in cache
+    opts: ForwardOptions = ForwardOptions(),
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serving step: returns (logits [b, vocab] f32, new state)."""
+    unit = cfg.pattern_unit()
+    x = embed_tokens(cfg, params["embed"], tokens)
+
+    def scan_step(x, unit_in):
+        unit_params, unit_state = unit_in
+        new_state = {}
+        for i, spec in enumerate(unit):
+            x, sub_state, _ = apply_sublayer(
+                cfg, unit_params[f"sub{i}"], spec, x,
+                mode="decode",
+                state=unit_state[f"sub{i}"],
+                cache_len=cache_len,
+                opts=opts,
+            )
+            new_state[f"sub{i}"] = sub_state
+        return x, new_state
+
+    x, new_states = jax.lax.scan(scan_step, x, (params["units"], state))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], params.get("lm_head"), x)
+    return logits[:, 0, :], new_states
+
+
+# ------------------------------------------------------- encoder-decoder ---
+
+def init_encdec_params(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Any]:
+    """Whisper-style: encoder stack (bidirectional) + decoder stack with
+    cross-attention. The encoder consumes precomputed frame embeddings
+    (conv frontend is a stub per the brief)."""
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+
+    # Encoder: plain attention+MLP sublayers, bidirectional.
+    enc_layers = [
+        {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "attn": init_attention(cfg, jax.random.fold_in(keys[0], i)),
+            "ffn_norm": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(cfg, jax.random.fold_in(keys[1], i)),
+        }
+        for i in range(cfg.n_encoder_layers)
+    ]
+    enc_split = [split_params(l) for l in enc_layers]
+    enc_values = _stack_trees([v for v, _ in enc_split])
+    enc_axes = jax.tree.map(
+        lambda a: ("layers",) + tuple(a), enc_split[0][1],
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+    # Decoder: self-attn + cross-attn + MLP.
+    dec_layers = [
+        {
+            "self_norm": init_norm(cfg, cfg.d_model),
+            "self_attn": init_attention(cfg, jax.random.fold_in(keys[2], i)),
+            "cross_norm": init_norm(cfg, cfg.d_model),
+            "cross_attn": init_attention(cfg, jax.random.fold_in(keys[3], i)),
+            "ffn_norm": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(cfg, jax.random.fold_in(keys[4], i)),
+        }
+        for i in range(cfg.n_layers)
+    ]
+    dec_split = [split_params(l) for l in dec_layers]
+    dec_values = _stack_trees([v for v, _ in dec_split])
+    dec_axes = jax.tree.map(
+        lambda a: ("layers",) + tuple(a), dec_split[0][1],
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+    embed_v, embed_a = split_params(init_embedding(cfg, keys[5]))
+    pos_v, pos_a = split_params(
+        {
+            "enc": normal_init(keys[6], (cfg.encoder_seq, cfg.d_model), (None, "embed"), param_dtype(cfg)),
+        }
+    )
+    enorm_v, enorm_a = split_params(init_norm(cfg, cfg.d_model))
+    dnorm_v, dnorm_a = split_params(init_norm(cfg, cfg.d_model))
+
+    values = {
+        "embed": embed_v,
+        "pos": pos_v,
+        "encoder": enc_values,
+        "enc_norm": enorm_v,
+        "decoder": dec_values,
+        "final_norm": dnorm_v,
+    }
+    axes = {
+        "embed": embed_a,
+        "pos": pos_a,
+        "encoder": enc_axes,
+        "enc_norm": enorm_a,
+        "decoder": dec_axes,
+        "final_norm": dnorm_a,
+    }
+    return values, axes
+
+
+def _encode(
+    cfg: ModelConfig, params: Params, enc_embeds: jax.Array,
+    opts: "ForwardOptions" = None,
+) -> jax.Array:
+    """Encoder forward on precomputed frame embeddings [b, s_enc, d]."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    s = x.shape[1]
+    pos = params["pos"]["enc"][:s].astype(x.dtype)
+    x = x + pos[None]
+    positions = jnp.arange(s)
+
+    def enc_step(x, layer):
+        h = apply_norm(cfg, layer["attn_norm"], x)
+        q, k, v = project_qkv(cfg, layer["attn"], h, positions)
+        o = attention_reference(q, k, v, causal=False)
+        x = x + project_out(layer["attn"], o)
+        hf = apply_norm(cfg, layer["ffn_norm"], x)
+        x = x + apply_mlp(cfg, layer["mlp"], hf)
+        return x, None
+
+    if opts is not None and opts.remat != "none":
+        enc_step = jax.checkpoint(enc_step, policy=_remat_policy(opts.remat))
+    x, _ = jax.lax.scan(enc_step, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _cross_attend(
+    cfg: ModelConfig, layer: Params, x: jax.Array, enc_out: jax.Array,
+    positions: jax.Array,
+) -> jax.Array:
+    h = apply_norm(cfg, layer["cross_norm"], x)
+    # queries from decoder; keys/values from encoder output (no RoPE on k).
+    q = jnp.einsum("bsd,dhk->bshk", h, layer["cross_attn"]["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wv"].astype(h.dtype))
+    o = attention_reference(q, k, v, causal=False)
+    return x + project_out(layer["cross_attn"], o)
+
+
+def encdec_forward(
+    cfg: ModelConfig,
+    params: Params,
+    enc_embeds: jax.Array,       # [b, s_enc, d] precomputed frame embeddings
+    dec_tokens: jax.Array,       # [b, s_dec]
+    opts: ForwardOptions = ForwardOptions(),
+) -> Tuple[jax.Array, jax.Array]:
+    """Training forward. Returns (logits [b, s_dec, vocab] f32, aux=0)."""
+    enc_out = _encode(cfg, params, enc_embeds, opts)
+    x = embed_tokens(cfg, params["embed"], dec_tokens)
+    positions = jnp.arange(x.shape[1])
+
+    def dec_step(x, layer):
+        h = apply_norm(cfg, layer["self_norm"], x)
+        q, k, v = project_qkv(cfg, layer["self_attn"], h, positions)
+        o = attention_reference(q, k, v, causal=True)
+        x = x + project_out(layer["self_attn"], o)
+        x = _cross_attend(cfg, layer, x, enc_out, positions)
+        hf = apply_norm(cfg, layer["ffn_norm"], x)
+        x = x + apply_mlp(cfg, layer["mlp"], hf)
+        return x, None
+
+    if opts.remat != "none":
+        dec_step = jax.checkpoint(dec_step, policy=_remat_policy(opts.remat))
+    x, _ = jax.lax.scan(dec_step, x, params["decoder"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], None, x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_encdec_state(
+    cfg: ModelConfig, batch: int, max_len: int, s_enc: int
+) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    return {
+        "self_kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            init_kv_cache(batch, max_len, cfg.n_kv_heads, hd, dt),
+        ),
+        # cross K/V computed once at prefill: [L, b, s_enc, K, hd]
+        "cross_k": jnp.zeros((cfg.n_layers, batch, s_enc, cfg.n_kv_heads, hd), dt),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, s_enc, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def encdec_prefill(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict[str, Any],
+    enc_embeds: jax.Array,
+    opts: ForwardOptions = ForwardOptions(),
+) -> Dict[str, Any]:
+    """Run the encoder and precompute per-layer cross K/V."""
+    enc_out = _encode(cfg, params, enc_embeds)
+
+    def layer_kv(_, layer):
+        k = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, layer["cross_attn"]["wk"].astype(enc_out.dtype)
+        )
+        v = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, layer["cross_attn"]["wv"].astype(enc_out.dtype)
+        )
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(layer_kv, None, params["decoder"])
+    return {**state, "cross_k": ck, "cross_v": cv}
+
+
+def encdec_decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    state: Dict[str, Any],
+    tokens: jax.Array,          # [b, 1]
+    cache_len: jax.Array,
+    opts: ForwardOptions = ForwardOptions(),
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = embed_tokens(cfg, params["embed"], tokens)
+    s_enc = state["cross_k"].shape[2]
+
+    def dec_step(x, layer_in):
+        layer, kv, ck, cv = layer_in
+        h = apply_norm(cfg, layer["self_norm"], x)
+        positions = jnp.reshape(cache_len, (1,))
+        q, k, v = project_qkv(cfg, layer["self_attn"], h, positions)
+        kv = update_kv_cache(kv, k, v, cache_len)
+        o = decode_attention(q, kv["k"], kv["v"], cache_len + 1)
+        x = x + project_out(layer["self_attn"], o)
+        # cross attention over the (fixed) encoder output
+        hc = apply_norm(cfg, layer["cross_norm"], x)
+        qc = jnp.einsum("bsd,dhk->bshk", hc, layer["cross_attn"]["wq"].astype(hc.dtype))
+        oc = decode_attention(qc, ck, cv, jnp.int32(s_enc))
+        x = x + project_out(layer["cross_attn"], oc)
+        hf = apply_norm(cfg, layer["ffn_norm"], x)
+        x = x + apply_mlp(cfg, layer["mlp"], hf)
+        return x, kv
+
+    x, new_kv = jax.lax.scan(
+        dec_step,
+        x,
+        (params["decoder"], state["self_kv"], state["cross_k"], state["cross_v"]),
+    )
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], None, x)
+    return logits[:, 0, :], {**state, "self_kv": new_kv}

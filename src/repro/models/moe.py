@@ -1,0 +1,219 @@
+"""Mixture-of-Experts FFN with two mathematically equivalent dispatches.
+
+* ``gather``  — capacity-based token-choice dispatch: top-k routing, position
+  within expert via cumsum, gather [E, C, d] -> expert GEMMs -> weighted
+  scatter-add. FLOPs proportional to *active* parameters (the production
+  path). Tokens overflowing an expert's capacity are dropped (standard GShard
+  semantics); capacity_factor trades drop rate for padding waste.
+* ``dense``   — every token runs every expert; routing weights (zero for
+  unselected experts) combine the results. No gather/scatter memory ops but
+  ~E/top_k x more FLOPs. With no capacity drops the two dispatches are
+  bit-identical in exact arithmetic — the equal-*result*, different-FLOPs
+  regime of the paper's discriminant test (see repro.autotune).
+
+TPU adaptation: everything is static-shape einsum + cumsum + scatter — no
+dynamic shapes, MXU-friendly; expert dim shards over "model" (EP) when
+divisible, else per-expert d_ff shards over "model" (TP-in-expert).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import P, Params, normal_init, param_dtype
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = param_dtype(cfg)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.resolved_moe_d_ff
+    keys = jax.random.split(key, 8)
+    out_std = 0.02 / np.sqrt(2 * cfg.n_layers)
+    params: Params = {
+        "router": normal_init(keys[0], (d, e), ("embed", None), dt),
+        "wi": normal_init(keys[1], (e, d, f), ("experts", "embed", "moe_ffn"), dt),
+        "wg": normal_init(keys[2], (e, d, f), ("experts", "embed", "moe_ffn"), dt),
+        "wo": normal_init(keys[3], (e, f, d), ("experts", "moe_ffn", "embed"), dt, out_std),
+    }
+    if cfg.n_shared_experts > 0:
+        sf = cfg.resolved_shared_d_ff
+        params["shared"] = {
+            "wi": normal_init(keys[4], (d, sf), ("embed", "ffn"), dt),
+            "wg": normal_init(keys[5], (d, sf), ("embed", "ffn"), dt),
+            "wo": normal_init(keys[6], (sf, d), ("ffn", "embed"), dt, out_std),
+            "gate": normal_init(keys[7], (d, 1), ("embed", None), dt),
+        }
+    return params
+
+
+def _routing(
+    cfg: ModelConfig, params: Params, x2d: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Router: probs [T, E], top-k weights [T, k], indices [T, k], aux loss."""
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.moe_norm_topk:
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss.
+    t = x2d.shape[0]
+    e = cfg.n_experts
+    dispatch = jax.nn.one_hot(top_i, e, dtype=jnp.float32)        # [T, k, E]
+    frac_tokens = jnp.mean(jnp.sum(dispatch, axis=1), axis=0)      # [E]
+    frac_probs = jnp.mean(probs, axis=0)                           # [E]
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return probs, top_w, top_i, aux
+
+
+def _constrain(x, sharding):
+    if sharding is not None:
+        return jax.lax.with_sharding_constraint(x, sharding)
+    return x
+
+
+def _expert_ffn(
+    cfg: ModelConfig, params: Params, xe: jax.Array, shardings=None
+) -> jax.Array:
+    """Per-expert gated FFN on [E, C, d] -> [E, C, d].
+
+    ``shardings`` (dict wi/wg/wo -> NamedSharding) pins the COMPUTE-time
+    weight layout: expert weights are ZeRO-stored with d_model sharded over
+    'data', and without the pin GSPMD sometimes resolves the d-contraction
+    by all-reducing f32 partial sums (audited: 260 GB/device per AR on
+    qwen2-moe) instead of gathering the ~1 GB of weights.
+    """
+    sh = shardings or {}
+    wi = _constrain(params["wi"], sh.get("wi")).astype(xe.dtype)
+    wg = _constrain(params["wg"], sh.get("wg")).astype(xe.dtype)
+    wo = _constrain(params["wo"], sh.get("wo")).astype(xe.dtype)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    if cfg.activation == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_gather(
+    cfg: ModelConfig, params: Params, x2d: jax.Array, shardings=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based gather dispatch. x2d [T, d] -> ([T, d], aux)."""
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = int(np.ceil(t * k * cfg.moe_capacity_factor / e))
+    capacity = max(4, min(t, (capacity + 3) // 4 * 4))
+
+    _, top_w, top_i, aux = _routing(cfg, params, x2d)
+
+    # Position of each assignment within its expert, sort-based: argsort
+    # groups assignments by expert; the position is the rank within the
+    # expert's run. Integer-only (no [T*k, E] one-hot/cumsum tensors in the
+    # fwd or bwd graph — §Perf iteration on granite-moe).
+    flat_e = top_i.reshape(-1)                            # [T*k]
+    order = jnp.argsort(flat_e, stable=True)              # [T*k]
+    counts = jnp.bincount(flat_e, length=e)               # [E]
+    starts = jnp.cumsum(counts) - counts                  # exclusive [E]
+    sorted_e = flat_e[order]
+    pos_sorted = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)
+
+    token_of = jnp.tile(jnp.arange(t)[:, None], (1, k)).reshape(-1)
+    # Scatter token ids into the dispatch table. Overflowing assignments have
+    # pos >= capacity, i.e. out-of-bounds — mode="drop" discards them without
+    # clobbering legitimate slots. Unfilled slots keep the sentinel T.
+    disp = jnp.full((e, capacity), t, dtype=jnp.int32)
+    disp = disp.at[flat_e, pos].set(token_of, mode="drop")
+
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    xe = x_pad[disp]                                      # [E, C, d]
+    ye = _expert_ffn(cfg, params, xe, shardings)          # [E, C, d]
+
+    # Combine: weight per (e, c) slot = routing weight of its assignment.
+    flat_w = top_w.reshape(-1).astype(x2d.dtype)          # [T*k]
+    w_slot = jnp.zeros((e, capacity), x2d.dtype)
+    w_slot = w_slot.at[flat_e, pos].set(flat_w, mode="drop")
+    out = jnp.zeros((t + 1, d), x2d.dtype)
+    out = out.at[disp.reshape(-1)].add(
+        (ye * w_slot[..., None]).reshape(-1, d), mode="drop"
+    )
+    out = out[:t]
+
+    if cfg.n_shared_experts > 0:
+        out = out + _shared_expert(cfg, params["shared"], x2d)
+    return out, aux
+
+
+def moe_dense(
+    cfg: ModelConfig, params: Params, x2d: jax.Array, shardings=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Dense dispatch: all tokens x all experts, combine by routing weight."""
+    t, d = x2d.shape
+    e = cfg.n_experts
+    _, top_w, top_i, aux = _routing(cfg, params, x2d)
+    combine = jnp.zeros((t, e), jnp.float32)
+    combine = combine.at[jnp.arange(t)[:, None], top_i].add(
+        top_w.astype(jnp.float32)
+    )  # [T, E]
+
+    xe = jnp.broadcast_to(x2d[None], (e, t, d))            # [E, T, d] (view)
+    ye = _expert_ffn(cfg, params, xe, shardings)           # [E, T, d]
+    out = jnp.einsum("etd,te->td", ye.astype(jnp.float32), combine).astype(x2d.dtype)
+
+    if cfg.n_shared_experts > 0:
+        out = out + _shared_expert(cfg, params["shared"], x2d)
+    return out, aux
+
+
+def _shared_expert(cfg: ModelConfig, sp: Params, x2d: jax.Array) -> jax.Array:
+    h = jnp.einsum("td,df->tf", x2d, sp["wi"].astype(x2d.dtype))
+    g = jnp.einsum("td,df->tf", x2d, sp["wg"].astype(x2d.dtype))
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("tf,fd->td", h, sp["wo"].astype(x2d.dtype))
+    gate = jax.nn.sigmoid(
+        jnp.einsum("td,do->to", x2d.astype(jnp.float32), sp["gate"].astype(jnp.float32))
+    ).astype(x2d.dtype)
+    return y * gate
+
+
+def apply_moe(
+    cfg: ModelConfig,
+    params: Params,
+    x: jax.Array,                  # [b, s, d]
+    dispatch: str = "gather",
+    shardings=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch per GROUP (= batch row), GShard-style.
+
+    Flattening b*s and dispatching over GLOBAL tokens makes the
+    position-cumsum a cross-shard dependency, so GSPMD de-shards the whole
+    dispatch (audited on qwen2-moe train_4k: 2 TB/device gathered tokens +
+    460 GB/device scatter-add all-reduces). Group-local dispatch keeps the
+    batch dim sharded end-to-end; per-group capacity is the standard GShard
+    load-balancing semantics.
+    """
+    b, s, d = x.shape
+    # Apply the compute-layout pin OUTSIDE the vmap: a constraint inside the
+    # vmapped body broadcasts the (unbatched) weights across groups
+    # (refuted §Perf iteration: 64x weight materialisation, tc x6).
+    if shardings:
+        params = dict(params)
+        for k in ("wi", "wg", "wo"):
+            if k in shardings and shardings[k] is not None:
+                params[k] = jax.lax.with_sharding_constraint(params[k], shardings[k])
+    if dispatch == "gather":
+        y, aux = jax.vmap(
+            lambda xr: moe_gather(cfg, params, xr), in_axes=0, out_axes=0
+        )(x)
+        return y, jnp.mean(aux)
+    if dispatch == "dense":
+        x2d = x.reshape(b * s, d)
+        y, aux = moe_dense(cfg, params, x2d)
+        return y.reshape(b, s, d), aux
+    raise ValueError(f"unknown MoE dispatch {dispatch!r}")

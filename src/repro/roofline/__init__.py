@@ -1,0 +1,15 @@
+"""repro.roofline — compute/memory/collective terms from compiled HLO."""
+
+from .hlo import HloCounts, analyze, parse_hlo
+from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms, terms_from_counts
+
+__all__ = [
+    "HBM_BW",
+    "HloCounts",
+    "ICI_BW",
+    "PEAK_FLOPS",
+    "RooflineTerms",
+    "analyze",
+    "parse_hlo",
+    "terms_from_counts",
+]

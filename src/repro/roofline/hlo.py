@@ -1,0 +1,486 @@
+"""HLO-text analyzer: FLOPs / bytes / collective bytes with correct
+while-loop (scan) trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a scanned
+model body is under-counted by its trip count (verified empirically; see
+EXPERIMENTS.md §Dry-run methodology). This analyzer parses
+``compiled.as_text()`` instead:
+
+* builds the computation call graph (ENTRY -> while bodies -> fusions),
+* extracts while trip counts from ``backend_config known_trip_count``,
+* counts per-computation:
+  - dot/convolution FLOPs (2 * prod(out) * prod(contracted dims)),
+  - HBM traffic model: 2x output bytes of every instruction in
+    *control-flow* computations (fused computations keep intermediates in
+    registers/VMEM, so only the fusion's own output counts),
+  - collective operand bytes per collective kind,
+* rolls totals up through the call graph with trip-count multipliers.
+
+All numbers are for the PER-DEVICE (post-SPMD-partitioning) program, which
+is exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_DIMS_RE = re.compile(r"\{([\d,]*)\}")
+# first lowercase word immediately followed by '(' after the type prefix
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-zA-Z0-9\-]*)\(")
+
+
+def _shape_info(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All (dtype, dims) arrays in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dtype, shape in _shape_info(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    rhs: str                 # everything right of '='
+    out_type: str            # first type string
+    opcode: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # instr -> type str
+    is_entry: bool = False
+
+
+@dataclass
+class HloCounts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "HloCounts":
+        return HloCounts(
+            flops=self.flops * k,
+            bytes=self.bytes * k,
+            collective_bytes={n: v * k for n, v in self.collective_bytes.items()},
+        )
+
+    def add(self, other: "HloCounts") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for n, v in other.collective_bytes.items():
+            self.collective_bytes[n] = self.collective_bytes.get(n, 0.0) + v
+
+
+COLLECTIVE_OPS = (
+    "all-reduce-start", "all-reduce", "all-gather-start", "all-gather",
+    "reduce-scatter", "all-to-all", "collective-permute-start",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id",
+    # control flow: carries alias in place; the ops INSIDE move the data
+    "while", "conditional", "call",
+}
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr is not None and "=" not in line.split("(")[0]:
+            current = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "<type> opcode(operands), attrs". Tuple types start with '('
+        # so we locate the opcode as the first lowercase word directly
+        # followed by '(' that sits OUTSIDE the type prefix.
+        op_m = _OPCODE_RE.search(rhs)
+        if op_m is None:
+            continue
+        out_type = rhs[: op_m.start()].strip()
+        opcode = op_m.group(1)
+        instr = Instruction(
+            name=name, rhs=rhs, out_type=out_type, opcode=opcode,
+            is_root="ROOT" in line.split("%", 1)[0],
+        )
+        current.instructions.append(instr)
+        current.shapes[name] = out_type
+    return comps
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    """FLOPs of a dot: 2 * prod(output dims) * prod(lhs contracting dims)."""
+    arrays = _shape_info(instr.out_type)
+    if not arrays:
+        return 0.0
+    out_elems = _prod(arrays[0][1])
+    m = re.search(r"dot\(([^)]*)\)", instr.rhs)
+    if m is None:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    lhs_type = comp.shapes.get(operands[0], "")
+    lhs_arrays = _shape_info(lhs_type)
+    cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rhs)
+    if not lhs_arrays or cdims_m is None:
+        return 2.0 * out_elems  # conservative fallback
+    lhs_shape = lhs_arrays[0][1]
+    cdims = [int(d) for d in cdims_m.group(1).split(",") if d]
+    k = _prod(lhs_shape[d] for d in cdims) if cdims else 1
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: Instruction, comp: Computation) -> float:
+    arrays = _shape_info(instr.out_type)
+    if not arrays:
+        return 0.0
+    out_elems = _prod(arrays[0][1])
+    m = re.search(r"convolution\(([^)]*)\)", instr.rhs)
+    if m is None:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    if len(operands) < 2:
+        return 0.0
+    rhs_arrays = _shape_info(comp.shapes.get(operands[1], ""))
+    if not rhs_arrays:
+        return 2.0 * out_elems
+    kernel_elems = _prod(rhs_arrays[0][1])
+    # per output element: 2 * kernel_elems / out_channels (dim mapping is
+    # config-dependent; this coarse form is fine — convs are negligible here)
+    return 2.0 * out_elems * max(kernel_elems, 1) ** 0.5
+
+
+def _dus_update_bytes(
+    instr: "Instruction",
+    comp: "Computation",
+    comps: Dict[str, "Computation"],
+) -> Optional[float]:
+    """If ``instr`` is a dynamic-update-slice (or a fusion rooted in one),
+    return the byte size of the UPDATE operand; else None."""
+    if instr.opcode == "dynamic-update-slice":
+        m = re.search(r"dynamic-update-slice\(([^)]*)\)", instr.rhs)
+        if m:
+            ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+            if len(ops) >= 2:
+                return float(_nbytes(comp.shapes.get(ops[1], "")))
+        return None
+    if instr.opcode == "fusion":
+        m = _CALLS_RE.search(instr.rhs)
+        if not m or m.group(1) not in comps:
+            return None
+        callee = comps[m.group(1)]
+        roots = [i for i in callee.instructions if i.is_root]
+        root = roots[0] if roots else (callee.instructions[-1] if callee.instructions else None)
+        if root is None or root.opcode != "dynamic-update-slice":
+            return None
+        mm = re.search(r"dynamic-update-slice\(([^)]*)\)", root.rhs)
+        if mm:
+            ops = [o.strip().lstrip("%") for o in mm.group(1).split(",")]
+            if len(ops) >= 2:
+                return float(_nbytes(callee.shapes.get(ops[1], "")))
+    return None
+
+
+def _operand_bytes(instr: "Instruction", comp: "Computation") -> float:
+    m = re.search(r"\(([^)]*)\)", instr.rhs)
+    if not m:
+        return 0.0
+    total = 0.0
+    for op in m.group(1).split(","):
+        op = op.strip().lstrip("%")
+        total += _nbytes(comp.shapes.get(op, ""))
+    return total
+
+
+#: TPU-calibrated HBM traffic model: elementwise chains fuse into their
+#: producers on the TPU target (the CPU HLO we analyze leaves them unfused),
+#: so only *major* ops are charged for HBM traffic.
+def _op_hbm_bytes(
+    instr: "Instruction", comp: "Computation", comps: Dict[str, "Computation"]
+) -> float:
+    op = instr.opcode
+    out_b = _nbytes(instr.out_type)
+    if op in ("dot", "convolution"):
+        return _operand_bytes(instr, comp) + out_b
+    if op in ("copy", "transpose", "reverse", "reshape", "all-to-all",
+              "collective-permute", "all-gather", "all-reduce",
+              "reduce-scatter"):
+        # data movement: read + write (collectives touch HBM both ways on
+        # top of the ICI bytes tracked separately)
+        return 2.0 * out_b
+    if op in ("gather", "dynamic-slice"):
+        return 2.0 * out_b
+    if op in ("scatter", "dynamic-update-slice"):
+        upd = _dus_update_bytes(instr, comp, comps)
+        return 2.0 * (upd if upd is not None else out_b)
+    if op in ("reduce", "reduce-window", "sort"):
+        return _operand_bytes(instr, comp) + out_b
+    if op == "fusion":
+        upd = _dus_update_bytes(instr, comp, comps)
+        if upd is not None:
+            return 2.0 * upd
+        # fusion writes its output once; its consumers read it once.
+        # Parameter reads inside (weights feeding fused elementwise) are
+        # charged where major ops consume them.
+        return 2.0 * out_b
+    return 0.0  # elementwise / control flow / metadata: fused on TPU
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def analyze(text: str) -> HloCounts:
+    comps = parse_hlo(text)
+    fused: Set[str] = set()
+    for comp in comps.values():
+        for instr in comp.instructions:
+            if instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    fused.add(m.group(1))
+            # reduce/sort/scatter apply computations are elementwise-tiny —
+            # treat as fused (no HBM traffic of their own).
+            m = _APPLY_RE.search(instr.rhs)
+            if m:
+                fused.add(m.group(1))
+
+    memo: Dict[str, HloCounts] = {}
+
+    def comp_counts(name: str, stack: Tuple[str, ...] = ()) -> HloCounts:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HloCounts()
+        comp = comps[name]
+        total = HloCounts()
+        in_fused = name in fused
+        for instr in comp.instructions:
+            if instr.opcode == "dot":
+                total.flops += _dot_flops(instr, comp)
+            elif instr.opcode == "convolution":
+                total.flops += _conv_flops(instr, comp)
+            elif instr.opcode.startswith("while"):
+                body = _BODY_RE.search(instr.rhs)
+                trip_m = _TRIP_RE.search(instr.rhs)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    total.add(comp_counts(body.group(1), stack + (name,)).scaled(trip))
+                cond = _COND_RE.search(instr.rhs)
+                if cond:
+                    total.add(comp_counts(cond.group(1), stack + (name,)).scaled(trip))
+            elif instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    sub = comp_counts(m.group(1), stack + (name,))
+                    # FLOPs inside fusions count; bytes don't (fused
+                    # intermediates never reach HBM).
+                    total.flops += sub.flops
+                    for n, v in sub.collective_bytes.items():
+                        total.collective_bytes[n] = total.collective_bytes.get(n, 0) + v
+            elif instr.opcode in ("call", "custom-call", "async-start"):
+                m = _APPLY_RE.search(instr.rhs) or _CALLS_RE.search(instr.rhs)
+                if m:
+                    total.add(comp_counts(m.group(1), stack + (name,)))
+            elif instr.opcode == "conditional":
+                m = _BRANCHES_RE.search(instr.rhs)
+                if m:
+                    branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                    branch_counts = [comp_counts(b, stack + (name,)) for b in branches]
+                    if branch_counts:  # worst-case branch
+                        worst = max(branch_counts, key=lambda c: c.flops + c.bytes)
+                        total.add(worst)
+
+            base = instr.opcode.replace("-start", "") + (
+                "-start" if instr.opcode.endswith("-start") else ""
+            )
+            for coll in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+                if instr.opcode == coll or instr.opcode == coll + "-start":
+                    m = re.search(r"\(([^)]*)\)", instr.rhs)
+                    if m:
+                        bts = 0
+                        for op in m.group(1).split(","):
+                            op = op.strip().lstrip("%")
+                            bts += _nbytes(comp.shapes.get(op, ""))
+                        total.collective_bytes[coll] = (
+                            total.collective_bytes.get(coll, 0.0) + bts
+                        )
+                    break
+
+            if not in_fused:
+                total.bytes += _op_hbm_bytes(instr, comp, comps)
+
+        memo[name] = total
+        return total
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCounts()
+    return comp_counts(entry)
+
+
+def breakdown_by_opcode(text: str) -> Dict[str, Dict[str, float]]:
+    """Per-opcode {flops, bytes} totals with trip-count weighting — the
+    §Perf hypothesis generator ("what moves the dominant term")."""
+    comps = parse_hlo(text)
+    fused: Set[str] = set()
+    for comp in comps.values():
+        for instr in comp.instructions:
+            if instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    fused.add(m.group(1))
+            m = _APPLY_RE.search(instr.rhs)
+            if m:
+                fused.add(m.group(1))
+
+    table: Dict[str, Dict[str, float]] = {}
+    memo_mult: Dict[str, float] = {}
+
+    def visit(name: str, mult: float, stack=()) -> None:
+        if name not in comps or name in stack:
+            return
+        comp = comps[name]
+        in_fused = name in fused
+        for instr in comp.instructions:
+            rec = table.setdefault(instr.opcode, {"flops": 0.0, "bytes": 0.0, "count": 0.0})
+            if instr.opcode == "dot":
+                rec["flops"] += mult * _dot_flops(instr, comp)
+            elif instr.opcode == "convolution":
+                rec["flops"] += mult * _conv_flops(instr, comp)
+            if not in_fused:
+                rec["bytes"] += mult * _op_hbm_bytes(instr, comp, comps)
+            rec["count"] += mult
+            if instr.opcode.startswith("while"):
+                body = _BODY_RE.search(instr.rhs)
+                trip_m = _TRIP_RE.search(instr.rhs)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    visit(body.group(1), mult * trip, stack + (name,))
+            elif instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    visit(m.group(1), mult, stack + (name,))
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry:
+        visit(entry, 1.0)
+    return table
+
+
+def attention_score_traffic(
+    text: str, seq_dims: Sequence[int]
+) -> float:
+    """HBM bytes attributable to materialised attention-score-shaped
+    tensors: any non-fused instruction whose output's trailing two dims are
+    both in ``seq_dims`` (e.g. {4096, 256} for a seq-sharded 4k cell).
+
+    The Pallas flash-attention kernel keeps these tiles in VMEM; the
+    kernel-adjusted memory term subtracts this traffic (EXPERIMENTS.md
+    §Perf records both the XLA-attention and kernel-path numbers).
+    """
+    comps = parse_hlo(text)
+    fused: Set[str] = set()
+    for comp in comps.values():
+        for instr in comp.instructions:
+            if instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    fused.add(m.group(1))
+            m = _APPLY_RE.search(instr.rhs)
+            if m:
+                fused.add(m.group(1))
+    sset = set(int(s) for s in seq_dims)
+
+    total = 0.0
+
+    def visit(name: str, mult: float, stack=()) -> None:
+        nonlocal total
+        if name not in comps or name in stack:
+            return
+        comp = comps[name]
+        in_fused = name in fused
+        for instr in comp.instructions:
+            if not in_fused:
+                arrays = _shape_info(instr.out_type)
+                if arrays:
+                    shape = arrays[0][1]
+                    # rank >= 4 [b, h, sq, skv]: avoids counting [b, s, d]
+                    # residuals when d_model happens to equal seq_len.
+                    if (
+                        len(shape) >= 4
+                        and shape[-1] in sset
+                        and shape[-2] in sset
+                    ):
+                        total += mult * _op_hbm_bytes(instr, comp, comps)
+            if instr.opcode.startswith("while"):
+                body = _BODY_RE.search(instr.rhs)
+                trip_m = _TRIP_RE.search(instr.rhs)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    visit(body.group(1), mult * trip, stack + (name,))
+            elif instr.opcode == "fusion":
+                m = _CALLS_RE.search(instr.rhs)
+                if m:
+                    visit(m.group(1), mult, stack + (name,))
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry:
+        visit(entry, 1.0)
+    return total

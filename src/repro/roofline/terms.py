@@ -1,0 +1,126 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s HBM
+bandwidth, ~50 GB/s/link ICI.
+
+    T_comp = HLO_FLOPs_per_device / peak_FLOPs
+    T_mem  = HLO_bytes_per_device / HBM_bw
+    T_coll = collective_bytes_per_device / ICI_bw
+
+All inputs come from the per-device (post-SPMD) program via
+:mod:`repro.roofline.hlo` (which fixes XLA cost_analysis' missing scan
+trip-count multiplication). The dominant term is the bottleneck; the
+roofline fraction reported in §Perf is T_ideal_compute / max(terms) where
+T_ideal_compute uses analytic MODEL_FLOPS (so wasted HLO compute counts
+against the score, not for it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from .hlo import HloCounts
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_devices: int
+
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    collective_bytes_per_dev: float
+    collective_breakdown: Dict[str, float]
+
+    model_flops_total: float          # analytic 6ND-style
+    memory_per_dev_bytes: float       # args + temp from memory_analysis
+
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.t_compute = self.hlo_flops_per_dev / PEAK_FLOPS
+        self.t_memory = self.hlo_bytes_per_dev / HBM_BW
+        self.t_collective = self.collective_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        total_hlo = self.hlo_flops_per_dev * self.n_devices
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction (the §Perf score): ideal time
+        for MODEL_FLOPS on all chips divided by the bounding term."""
+        ideal = self.model_flops_total / (self.n_devices * PEAK_FLOPS)
+        return ideal / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "kind": self.kind,
+            "devices": self.n_devices,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant,
+            "model_flops": f"{self.model_flops_total:.4e}",
+            "hlo_flops_per_dev": f"{self.hlo_flops_per_dev:.4e}",
+            "model_hlo_ratio": round(self.model_flops_ratio, 4),
+            "roofline_fraction": round(self.roofline_fraction, 4),
+            "mem_per_dev_gb": round(self.memory_per_dev_bytes / 2**30, 3),
+            "collectives": {
+                k: round(v / 2**30, 3) for k, v in self.collective_breakdown.items() if v
+            },
+        }
+
+
+def terms_from_counts(
+    arch: str,
+    shape: str,
+    mesh_desc: str,
+    kind: str,
+    n_devices: int,
+    counts: HloCounts,
+    model_flops_total: float,
+    memory_per_dev_bytes: float,
+) -> RooflineTerms:
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_desc,
+        kind=kind,
+        n_devices=n_devices,
+        hlo_flops_per_dev=counts.flops,
+        hlo_bytes_per_dev=counts.bytes,
+        collective_bytes_per_dev=counts.total_collective_bytes,
+        collective_breakdown=dict(counts.collective_bytes),
+        model_flops_total=model_flops_total,
+        memory_per_dev_bytes=memory_per_dev_bytes,
+    )

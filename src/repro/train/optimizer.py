@@ -1,0 +1,189 @@
+"""Optimizers (AdamW, Adafactor-mini) and LR schedules — pure pytree impls.
+
+Mixed precision layout: model params live in ``param_dtype`` (bf16 on TPU);
+the optimizer keeps an f32 master copy plus f32 moments, all sharded exactly
+like the parameters (ZeRO: the 'embed' logical axis is FSDP-sharded, so the
+12 bytes/param optimizer state divides across the full mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+# -------------------------------------------------------------- schedules --
+
+def cosine_schedule(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_frac: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr_value, jnp.float32)
+
+
+# ------------------------------------------------------------------ AdamW --
+
+class AdamWState(NamedTuple):
+    step: jax.Array       # scalar int32
+    master: Pytree        # f32 master params
+    mu: Pytree            # f32 first moment
+    nu: Pytree            # f32 second moment
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Pytree) -> AdamWState:
+        # copy=True: when param_dtype is already f32 an astype would alias
+        # the working params, and donating TrainState would then donate the
+        # same buffer twice.
+        f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            master=jax.tree.map(f32, params),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(
+        self, grads: Pytree, state: AdamWState, param_dtype: jnp.dtype
+    ) -> Tuple[Pytree, AdamWState, Dict[str, jax.Array]]:
+        """Returns (new bf16 params, new state, metrics)."""
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p)
+
+        master = jax.tree.map(upd, state.master, mu, nu)
+        params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return params, AdamWState(step=step, master=master, mu=mu, nu=nu), metrics
+
+
+# -------------------------------------------------------------- Adafactor --
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    master: Pytree
+    vr: Pytree            # row second-moment factors (or full v for <2D)
+    vc: Pytree            # col second-moment factors
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments (Shazeer & Stern) — 4→~2 bytes/param state.
+
+    Memory-saving option for the largest archs; moments for rank>=2 leaves
+    are factored over the last two dims.
+    """
+
+    schedule: Callable[[jax.Array], jax.Array]
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params: Pytree) -> AdafactorState:
+        def vr_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            vr=jax.tree.map(vr_init, params),
+            vc=jax.tree.map(vc_init, params),
+        )
+
+    def update(self, grads, state, param_dtype):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.schedule(step)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if p.ndim >= 2:
+                vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr_new, axis=-1, keepdims=True)
+                r = vr_new / jnp.maximum(denom, self.eps)
+                u = g / jnp.sqrt(r[..., None] * vc_new[..., None, :] + self.eps)
+            else:
+                vr_new = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                u = g / jnp.sqrt(vr_new + self.eps)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            p_new = p - lr * u - lr * self.weight_decay * p
+            return p_new, vr_new, vc_new
+
+        flat, treedef = jax.tree.flatten(state.master)
+        gflat = treedef.flatten_up_to(grads)
+        vrflat = treedef.flatten_up_to(state.vr)
+        vcflat = treedef.flatten_up_to(state.vc)
+        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat, gflat, vrflat, vcflat)]
+        master = treedef.unflatten([o[0] for o in out])
+        vr = treedef.unflatten([o[1] for o in out])
+        vc = treedef.unflatten([o[2] for o in out])
+        params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+        metrics = {"grad_norm": global_norm(grads), "lr": lr}
+        return params, AdafactorState(step=step, master=master, vr=vr, vc=vc), metrics
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )

@@ -1,0 +1,151 @@
+"""Training step builder: loss, grad accumulation, jit/sharding assembly.
+
+``make_train_step`` returns a jittable pure function
+``(train_state, batch) -> (train_state, metrics)`` with:
+
+* next-token cross-entropy (+ router aux loss, + optional z-loss) computed
+  in f32 against vocab-sharded logits;
+* microbatch gradient accumulation as a ``lax.scan`` *inside* the step (no
+  host round-trips);
+* remat policy on the scanned layer unit (ForwardOptions.remat);
+* AdamW/Adafactor update on the f32 master copy, bf16 param re-cast.
+
+Sharding comes from ``repro.distributed.sharding`` plans: the caller jits
+with in/out shardings derived from the same logical-axes tree, so this
+module stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ForwardOptions, ModelConfig, encdec_forward, lm_forward
+
+from .optimizer import AdamW, AdamWState, Adafactor, global_norm
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    params: Pytree          # param_dtype (bf16) working copy
+    opt: Any                # AdamWState / AdafactorState (f32)
+
+
+@dataclass(frozen=True)
+class LossConfig:
+    z_loss: float = 0.0
+    aux_coef: float = 0.001
+    label_ignore: int = -1
+
+
+def cross_entropy(
+    logits: jax.Array,          # [b, s, V] f32 (possibly vocab-sharded)
+    labels: jax.Array,          # [b, s] int32; ignore_index masked out
+    loss_cfg: LossConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    mask = (labels != loss_cfg.label_ignore).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # [b, s]
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"nll": loss, "tokens": jnp.sum(mask)}
+    if loss_cfg.z_loss > 0.0:
+        zl = loss_cfg.z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics
+
+
+def make_loss_fn(
+    cfg: ModelConfig,
+    opts: ForwardOptions,
+    loss_cfg: LossConfig,
+) -> Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]:
+    def loss_fn(params: Pytree, batch: Dict[str, jax.Array]):
+        if cfg.is_encoder_decoder:
+            logits, aux = encdec_forward(
+                cfg, params, batch["enc_embeds"], batch["tokens"], opts=opts
+            )
+        elif "embeds" in batch:
+            logits, aux = lm_forward(cfg, params, embeds=batch["embeds"], opts=opts)
+        else:
+            logits, aux = lm_forward(cfg, params, tokens=batch["tokens"], opts=opts)
+        loss, metrics = cross_entropy(logits, batch["labels"], loss_cfg)
+        total = loss + loss_cfg.aux_coef * aux
+        metrics["aux"] = aux
+        metrics["loss"] = total
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    opts: ForwardOptions = ForwardOptions(),
+    loss_cfg: LossConfig = LossConfig(),
+    num_microbatches: int = 1,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the pure train step (jit it with the plan's shardings)."""
+    loss_fn = make_loss_fn(cfg, opts, loss_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulated_grads(params, batch):
+        # batch leaves are [global_b, ...]; reshape to [n_micro, mb, ...]
+        def split(x):
+            return x.reshape((num_microbatches, x.shape[0] // num_microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, metrics_acc = carry
+            grads, metrics = single_grads(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            metrics_acc = jax.tree.map(lambda a, m: a + m, metrics_acc, metrics)
+            return (acc, metrics_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {
+            "nll": jnp.zeros((), jnp.float32),
+            "tokens": jnp.zeros((), jnp.float32),
+            "aux": jnp.zeros((), jnp.float32),
+            "loss": jnp.zeros((), jnp.float32),
+        }
+        if loss_cfg.z_loss > 0.0:
+            zero_m["z_loss"] = jnp.zeros((), jnp.float32)
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+        inv = 1.0 / num_microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+        metrics["tokens"] = metrics["tokens"] / inv  # tokens should sum
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if num_microbatches > 1:
+            grads, metrics = accumulated_grads(state.params, batch)
+        else:
+            grads, metrics = single_grads(state.params, batch)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt, jnp.dtype(cfg.param_dtype)
+        )
+        metrics.update(opt_metrics)
+        return TrainState(params=params, opt=opt_state), metrics
+
+    return train_step
+
+
+def init_train_state(
+    cfg: ModelConfig, optimizer: AdamW, params: Pytree
+) -> TrainState:
+    return TrainState(params=params, opt=optimizer.init(params))

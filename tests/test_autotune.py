@@ -1,0 +1,57 @@
+"""Autotuner: the paper's pipeline as the framework's variant selector."""
+
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    TuneReport,
+    moe_dispatch_site,
+    rank_site,
+    rank_site_costmodel,
+    ssd_chunk_site,
+)
+from repro.core import CostModelTimer
+
+
+def test_moe_dispatch_site_selects_gather():
+    rep = rank_site(
+        moe_dispatch_site(tokens=512, d=64, e=8, top_k=2, d_ff=32),
+        max_measurements=12,
+    )
+    assert rep.selected == "gather"
+    ranks = rep.ranking.ranks
+    if "dense" in ranks:  # dense may be dropped by the RT pre-filter
+        assert ranks["gather"] <= ranks["dense"]
+    else:
+        assert "dense" in rep.dropped
+
+
+def test_variants_compute_identical_outputs():
+    """The site's variants must be mathematically equivalent."""
+    import jax
+
+    site = moe_dispatch_site(tokens=128, d=32, e=4, top_k=2, d_ff=16)
+    arrays = site.make_inputs(0)
+    outs = {v.name: np.asarray(v.build(*arrays)()) for v in site.variants}
+    # gather drops overflow tokens; with capacity_factor they agree closely
+    diff = np.abs(outs["gather"] - outs["dense"])
+    agree = (diff < 1e-3).mean()
+    assert agree > 0.9, f"only {agree:.2%} of outputs agree"
+
+
+def test_costmodel_ranking_deterministic_and_selected():
+    costs = {"a": 1.0, "b": 1.0, "c": 2.0}
+    flops = {"a": 10.0, "b": 20.0, "c": 5.0}
+    rep = rank_site_costmodel("site", costs, flops, max_measurements=8)
+    # a and b tie on cost -> same class; min-FLOPs member selected
+    assert rep.ranking.ranks["a"] == rep.ranking.ranks["b"] == 1
+    assert rep.selected == "a"
+    # c has min FLOPs but is slower -> anomaly condition 1
+    assert rep.discriminant.is_anomaly
+    assert rep.discriminant.reason == "faster_outside_min_flops"
+
+
+def test_summary_renders():
+    rep = rank_site_costmodel("s", {"x": 1.0, "y": 2.0}, {"x": 1.0, "y": 2.0})
+    text = rep.summary()
+    assert "rank 1" in text and "x" in text

@@ -1,0 +1,308 @@
+"""Unit + property tests for repro.core — the paper's Procedures 1-4."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DEFAULT_QUANTILE_RANGES,
+    CostModelTimer,
+    MeasurementStore,
+    NoiseProfile,
+    Outcome,
+    SimulatedTimer,
+    compare_measurements,
+    convergence_norm,
+    filter_candidates,
+    first_differences,
+    flops_discriminant_test,
+    initial_hypothesis_by_time,
+    mean_ranks,
+    measure_and_rank,
+    min_flops_set,
+    relative_flops,
+    relative_times,
+    sort_algorithms,
+    sort_by_measurements,
+)
+
+
+# ----------------------------------------------------------- Procedure 1 ---
+
+def test_compare_disjoint_faster():
+    t_fast = [1.0, 1.1, 1.2]
+    t_slow = [2.0, 2.1, 2.2]
+    assert compare_measurements(t_fast, t_slow, 25, 75) is Outcome.BETTER
+    assert compare_measurements(t_slow, t_fast, 25, 75) is Outcome.WORSE
+
+
+def test_compare_overlap_equivalent():
+    a = [1.0, 2.0, 3.0]          # q25=1.5, q75=2.5
+    b = [1.5, 2.5, 3.5]          # q25=2.0, q75=3.0 — windows overlap
+    assert compare_measurements(a, b, 25, 75) is Outcome.EQUIVALENT
+
+
+def test_compare_invalid_range():
+    with pytest.raises(ValueError):
+        compare_measurements([1.0], [2.0], 75, 25)
+    with pytest.raises(ValueError):
+        compare_measurements([1.0], [2.0], 0.0, 75)
+
+
+def test_wider_range_merges_more():
+    """Paper Table III: wide quantile ranges declare equivalence more often."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(1.0, 0.2, 50)
+    b = rng.normal(1.3, 0.2, 50)
+    wide = compare_measurements(a, b, 5, 95)
+    narrow = compare_measurements(a, b, 45, 55)
+    assert wide is Outcome.EQUIVALENT
+    assert narrow is Outcome.BETTER
+
+
+@given(
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+)
+@settings(max_examples=60, deadline=None)
+def test_comparison_antisymmetric(a, b):
+    """Property: cmp(a, b) is the flip of cmp(b, a)."""
+    ab = compare_measurements(a, b, 25, 75)
+    ba = compare_measurements(b, a, 25, 75)
+    assert ab is ba.flipped()
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_comparison_reflexive_equivalent(a):
+    assert compare_measurements(a, a, 25, 75) is Outcome.EQUIVALENT
+
+
+# ----------------------------------------------------------- Procedure 2 ---
+
+def _paper_fig4_comparator():
+    rel = {
+        ("alg1", "alg2"): Outcome.WORSE,
+        ("alg1", "alg3"): Outcome.EQUIVALENT,
+        ("alg3", "alg4"): Outcome.WORSE,
+        ("alg1", "alg4"): Outcome.WORSE,
+        ("alg2", "alg4"): Outcome.EQUIVALENT,
+        ("alg2", "alg1"): Outcome.BETTER,
+        ("alg2", "alg3"): Outcome.BETTER,
+        ("alg4", "alg1"): Outcome.BETTER,
+        ("alg4", "alg3"): Outcome.BETTER,
+        ("alg3", "alg1"): Outcome.EQUIVALENT,
+        ("alg4", "alg2"): Outcome.EQUIVALENT,
+    }
+    return lambda a, b: rel[(a, b)]
+
+
+def test_sort_reproduces_paper_fig4():
+    """The worked example of Sec. III ends at ranks [1, 1, 2, 2]."""
+    names, ranks = sort_algorithms(
+        ["alg1", "alg2", "alg3", "alg4"], _paper_fig4_comparator(), tie_break="class"
+    )
+    assert names == ["alg2", "alg4", "alg1", "alg3"]
+    assert ranks == [1, 1, 2, 2]
+
+
+def test_sort_literal_rule_differs():
+    """The paper's literal pseudocode rule gives [1,1,2,3] on Fig. 4 — the
+    documented discrepancy (DESIGN.md §7)."""
+    _, ranks = sort_algorithms(
+        ["alg1", "alg2", "alg3", "alg4"], _paper_fig4_comparator(), tie_break="literal"
+    )
+    assert ranks == [1, 1, 2, 3]
+
+
+def test_sort_single_and_empty():
+    assert sort_algorithms(["x"], lambda a, b: Outcome.EQUIVALENT) == (["x"], [1])
+
+
+@given(
+    st.lists(st.floats(0.5, 5.0), min_size=2, max_size=8),
+    st.floats(0.0, 0.3),
+)
+@settings(max_examples=40, deadline=None)
+def test_sort_rank_invariants(base_times, spread):
+    """Property: ranks start at 1, are non-decreasing along the sequence,
+    and adjacent ranks differ by at most 1 — for arbitrary measurement
+    tables."""
+    rng = np.random.default_rng(42)
+    meas = {
+        f"a{i}": rng.normal(t, max(spread * t, 1e-6), 12).clip(1e-3).tolist()
+        for i, t in enumerate(base_times)
+    }
+    names, ranks = sort_by_measurements(sorted(meas), meas, (25, 75))
+    assert ranks[0] == 1
+    for r0, r1 in zip(ranks, ranks[1:]):
+        assert r0 <= r1 <= r0 + 1
+    assert sorted(names) == sorted(meas)
+
+
+def test_sort_separated_distributions_fully_ordered():
+    meas = {
+        "fast": list(np.linspace(1.0, 1.05, 10)),
+        "mid": list(np.linspace(2.0, 2.05, 10)),
+        "slow": list(np.linspace(3.0, 3.05, 10)),
+    }
+    names, ranks = sort_by_measurements(["slow", "mid", "fast"], meas, (25, 75))
+    assert names == ["fast", "mid", "slow"]
+    assert ranks == [1, 2, 3]
+
+
+# ----------------------------------------------------------- Procedure 3 ---
+
+def test_mean_ranks_three_classes():
+    """Fig. 3-style data: two fast, two mid, two slow -> classes 1/2/3 at
+    (q25, q75)."""
+    rng = np.random.default_rng(7)
+    meas = {
+        "a0": rng.normal(1.00, 0.05, 40).tolist(),
+        "a1": rng.normal(1.02, 0.05, 40).tolist(),
+        "a2": rng.normal(1.50, 0.05, 40).tolist(),
+        "a3": rng.normal(1.52, 0.05, 40).tolist(),
+        "a4": rng.normal(2.00, 0.05, 40).tolist(),
+        "a5": rng.normal(2.02, 0.05, 40).tolist(),
+    }
+    res = mean_ranks(sorted(meas), meas)
+    table = dict(zip(res.order, res.ranks))
+    assert {table["a0"], table["a1"]} == {1}
+    assert {table["a2"], table["a3"]} == {2}
+    assert {table["a4"], table["a5"]} == {3}
+    # mean ranks respect the class structure
+    assert res.mean_ranks["a0"] < res.mean_ranks["a2"] < res.mean_ranks["a4"]
+
+
+# ----------------------------------------------------------- Procedure 4 ---
+
+def test_convergence_norm_matches_paper_example():
+    x = [1, 1, 1.86, 2.0, 2.57, 2.57]
+    y = [1, 1, 1.86, 1.86, 2.43, 2.43]
+    dx = first_differences(x)
+    dy = first_differences(y)
+    assert abs(convergence_norm(dy, dx, 5) - 0.028) < 1e-3
+
+
+def test_measure_and_rank_converges_and_orders():
+    profiles = {
+        "fast": NoiseProfile(base=1.0, rel_sigma=0.02),
+        "fast2": NoiseProfile(base=1.01, rel_sigma=0.02),
+        "slow": NoiseProfile(base=2.0, rel_sigma=0.02),
+    }
+    timer = SimulatedTimer(profiles, seed=3)
+    res = measure_and_rank(
+        ["slow", "fast", "fast2"], timer, m_per_iteration=3,
+        eps=0.03, max_measurements=30,
+    )
+    assert res.converged
+    ranks = res.ranks
+    assert ranks["fast"] == ranks["fast2"] == 1
+    assert ranks["slow"] > 1
+    assert res.measurements_per_alg <= 30
+    assert len(res.history) >= 1
+
+
+def test_measure_and_rank_budget_cap():
+    # eps < 0 can never fire (norm >= 0): the loop must stop on the budget
+    profiles = {
+        "a": NoiseProfile(base=1.0, rel_sigma=0.5),
+        "b": NoiseProfile(base=1.02, rel_sigma=0.5),
+    }
+    res = measure_and_rank(
+        ["a", "b"], SimulatedTimer(profiles, seed=0),
+        m_per_iteration=2, eps=-1.0, max_measurements=8,
+    )
+    assert res.measurements_per_alg == 8
+    assert not res.converged
+
+
+def test_cost_model_timer_deterministic():
+    timer = CostModelTimer({"x": 1.0, "y": 2.0})
+    res = measure_and_rank(["y", "x"], timer, m_per_iteration=2, max_measurements=8)
+    assert res.ranks == {"x": 1, "y": 2}
+
+
+# ------------------------------------------------------ scores / filters ---
+
+def test_relative_scores():
+    rf = relative_flops({"a": 100.0, "b": 150.0})
+    assert rf == {"a": 0.0, "b": 0.5}
+    rt = relative_times({"a": 2.0, "b": 1.0})
+    assert rt == {"a": 1.0, "b": 0.0}
+    assert min_flops_set({"a": 1.0, "b": 1.0, "c": 2.0}) == ("a", "b")
+
+
+def test_filter_candidates_keeps_min_flops_always():
+    flops = {"minf": 100.0, "fast": 200.0, "slowhi": 300.0}
+    times = {"minf": 5.0, "fast": 1.0, "slowhi": 4.0}  # minf slow single-run
+    cand = filter_candidates(flops, times, rt_threshold=1.5)
+    assert "minf" in cand.names          # S_F always kept
+    assert "fast" in cand.names
+    assert "slowhi" in cand.dropped      # RT = 3.0 >= 1.5
+
+
+# -------------------------------------------------------- discriminant -----
+
+def _ranking_from(meas, order=None):
+    store = MeasurementStore()
+    for k, v in meas.items():
+        store.add(k, v)
+    timer = CostModelTimer({k: float(np.median(v)) for k, v in meas.items()})
+    return measure_and_rank(
+        order or sorted(meas), timer, m_per_iteration=2, max_measurements=6
+    )
+
+
+def test_discriminant_valid():
+    res = _ranking_from({"a": [1.0] * 5, "b": [2.0] * 5})
+    rep = flops_discriminant_test(res, {"a": 10.0, "b": 20.0})
+    assert not rep.is_anomaly
+
+
+def test_discriminant_anomaly_outside_min_flops():
+    """Condition 1: a non-min-FLOPs algorithm strictly beats S_F."""
+    res = _ranking_from({"minf": [2.0] * 5, "hiflops": [1.0] * 5})
+    rep = flops_discriminant_test(res, {"minf": 10.0, "hiflops": 20.0})
+    assert rep.is_anomaly and rep.reason == "faster_outside_min_flops"
+
+
+def test_discriminant_anomaly_min_flops_split():
+    """Condition 2: members of S_F land in different classes."""
+    res = _ranking_from({"m1": [1.0] * 5, "m2": [3.0] * 5})
+    rep = flops_discriminant_test(res, {"m1": 10.0, "m2": 10.0})
+    assert rep.is_anomaly and rep.reason == "min_flops_split"
+
+
+def test_discriminant_requires_sf_present():
+    res = _ranking_from({"a": [1.0] * 5})
+    with pytest.raises(ValueError):
+        flops_discriminant_test(res, {"a": 10.0, "zzz_min": 1.0})
+
+
+# --------------------------------------------------------- turbo (bimodal) -
+
+def test_bimodal_fast_mode_quantiles():
+    """Paper Sec. IV: with turbo-boost bimodality, (q25,q75) merges the
+    algorithms but the left-tail quantile set separates them by fast-mode
+    performance."""
+    from repro.core import FAST_MODE_QUANTILE_RANGES
+
+    profiles = {
+        # alg_a: faster in fast mode, same slow mode
+        "a": NoiseProfile(base=1.0, rel_sigma=0.01, bimodal_shift=1.0, bimodal_prob=0.5),
+        "b": NoiseProfile(base=1.25, rel_sigma=0.01, bimodal_shift=0.6, bimodal_prob=0.5),
+    }
+    timer = SimulatedTimer(profiles, seed=11)
+    res_default = measure_and_rank(
+        ["a", "b"], timer, m_per_iteration=6, max_measurements=60, eps=0.001
+    )
+    timer2 = SimulatedTimer(profiles, seed=12)
+    res_fast = measure_and_rank(
+        ["a", "b"], timer2, m_per_iteration=6, max_measurements=60, eps=0.001,
+        quantile_ranges=FAST_MODE_QUANTILE_RANGES,
+        report_range=(15.0, 45.0),
+    )
+    # default (IQR-centred) view merges; the left-tail view separates
+    assert res_fast.ranks["a"] == 1
+    assert res_fast.ranks["b"] == 2

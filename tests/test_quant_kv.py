@@ -1,0 +1,55 @@
+"""Int8 KV-cache: round-trip bounds + decode-attention error bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import decode_attention, init_kv_cache, update_kv_cache
+from repro.serve.quant import (
+    dequantize_kv,
+    init_quant_kv_cache,
+    quant_decode_attention,
+    quantize_kv,
+    update_quant_kv_cache,
+)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bound(seed):
+    k = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, 2, 16))
+    q8, s = quantize_kv(k)
+    rec = dequantize_kv(q8, s, jnp.float32)
+    amax = np.abs(np.asarray(k)).max(axis=-1, keepdims=True)
+    err = np.abs(np.asarray(rec) - np.asarray(k))
+    assert (err <= amax / 127.0 + 1e-6).all()
+
+
+def test_quant_decode_attention_close_to_fp():
+    b, S, K, H, hd = 2, 64, 2, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, H, hd))
+    cache_fp = init_kv_cache(b, S, K, hd, jnp.float32)
+    cache_q8 = init_quant_kv_cache(b, S, K, hd)
+    # fill 40 positions
+    k_new = jax.random.normal(ks[1], (b, 40, K, hd))
+    v_new = jax.random.normal(ks[2], (b, 40, K, hd))
+    cache_fp = update_kv_cache(cache_fp, k_new, v_new, jnp.int32(0))
+    cache_q8 = update_quant_kv_cache(cache_q8, k_new, v_new, jnp.int32(0))
+
+    out_fp = decode_attention(q, cache_fp["k"], cache_fp["v"], jnp.int32(40))
+    out_q8 = quant_decode_attention(q, cache_q8, jnp.int32(40))
+    rel = float(
+        jnp.max(jnp.abs(out_q8 - out_fp)) / (jnp.max(jnp.abs(out_fp)) + 1e-9)
+    )
+    assert rel < 0.05, rel  # int8 cache stays within 5% on attention output
+
+
+def test_quant_cache_halves_bytes():
+    b, S, K, hd = 1, 128, 2, 64
+    fp = init_kv_cache(b, S, K, hd, jnp.bfloat16)
+    q8 = init_quant_kv_cache(b, S, K, hd)
+    fp_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(fp))
+    q8_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(q8))
+    assert q8_bytes < 0.6 * fp_bytes
