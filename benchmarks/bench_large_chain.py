@@ -28,7 +28,7 @@ from repro.expressions import (
 )
 
 
-def run(smoke: bool, out: List[str]) -> None:
+def run(smoke: bool, out: List[str], ctx=None) -> None:
     t0 = time.time()
     # skewed dims make the variant space performance-diverse
     scale = 1 if smoke else 2

@@ -140,7 +140,7 @@ def fig7b_fast_mode(smoke: bool, out: List[str]) -> None:
     out.append(f"fig7b.discriminant,0,anomaly={rep.is_anomaly} reason={rep.reason}")
 
 
-def run(smoke: bool, out: List[str]) -> None:
+def run(smoke: bool, out: List[str], ctx=None) -> None:
     table1_anomaly_instability(smoke, out)
     table2_three_classes(smoke, out)
     table3_quantile_ladder(smoke, out)

@@ -21,7 +21,7 @@ from repro.autotune import rank_site_costmodel
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports")
 
 
-def run(smoke: bool, out: List[str]) -> None:
+def run(smoke: bool, out: List[str], ctx=None) -> None:
     found = False
     for label in ("16x16", "2x16x16"):
         path = os.path.join(REPORT_DIR, f"dryrun_{label}.json")

@@ -12,6 +12,11 @@ two ends of the distribution; measurements shuffled). Validated claims:
    converges in FEWER measurements because wide overlap stabilises ranks
    early, while the cleaner bimodal exclusive node needs more samples
    (paper Sec. IV observes 15 vs 27).
+
+All four studies run as ONE interleaved ExperimentEngine campaign (each
+study = one session with its own simulated timer and quantile ladder);
+with ``--state-dir``/``--resume`` the campaign persists and resumes
+bit-identically, since simulated timers serialize their RNG state.
 """
 
 from __future__ import annotations
@@ -21,14 +26,15 @@ from typing import List
 
 from repro.core import (
     FAST_MODE_QUANTILE_RANGES,
+    MeasurementSession,
     NoiseProfile,
     SimulatedTimer,
-    measure_and_rank,
 )
 
+from .common import run_campaign
 
-def run(smoke: bool, out: List[str]) -> None:
-    t0 = time.time()
+
+def _sessions() -> List[MeasurementSession]:
     # Six equal-FLOPs algorithms; alg5 is distinctly faster ONLY in the fast
     # frequency mode (its slow-mode time matches the others) — instance-B
     # style.
@@ -42,31 +48,7 @@ def run(smoke: bool, out: List[str]) -> None:
     profiles["alg5"] = NoiseProfile(
         base=0.82, rel_sigma=0.01, bimodal_shift=0.62, bimodal_prob=0.5
     )
-
-    timer = SimulatedTimer(profiles, seed=42)
     order = sorted(profiles)
-    res_default = measure_and_rank(
-        order, timer, m_per_iteration=3, eps=0.03, max_measurements=45
-    )
-    out.append(
-        f"turbo.default_quantiles,{(time.time()-t0)*1e6:.0f},"
-        + "|".join(f"{a.name}:r{a.rank}" for a in res_default.sequence)
-    )
-    merged = max(r for r in res_default.ranks.values()) <= 2
-    out.append(f"turbo.default_mostly_merged,0,{merged}")
-
-    timer2 = SimulatedTimer(profiles, seed=43)
-    res_fast = measure_and_rank(
-        order, timer2, m_per_iteration=3, eps=0.03, max_measurements=45,
-        quantile_ranges=FAST_MODE_QUANTILE_RANGES, report_range=(15.0, 45.0),
-    )
-    out.append(
-        "turbo.fast_mode_quantiles,0,"
-        + "|".join(f"{a.name}:r{a.rank}" for a in res_fast.sequence)
-    )
-    out.append(
-        f"turbo.alg5_best_in_fast_mode,0,{res_fast.ranks['alg5'] == 1 and res_fast.sequence[0].name == 'alg5'}"
-    )
 
     # shared (noisy) vs exclusive (clean bimodal) convergence budgets
     shared = {
@@ -79,15 +61,59 @@ def run(smoke: bool, out: List[str]) -> None:
                                 bimodal_shift=0.4, bimodal_prob=0.5)
         for i in range(6)
     }
-    n_shared = measure_and_rank(
-        sorted(shared), SimulatedTimer(shared, seed=7),
-        m_per_iteration=3, eps=0.03, max_measurements=45,
-    ).measurements_per_alg
-    n_excl = measure_and_rank(
-        sorted(exclusive), SimulatedTimer(exclusive, seed=7),
-        m_per_iteration=3, eps=0.03, max_measurements=45,
-    ).measurements_per_alg
+
+    return [
+        MeasurementSession(
+            "default_quantiles", order, SimulatedTimer(profiles, seed=42),
+            m_per_iteration=3, eps=0.03, max_measurements=45,
+        ),
+        MeasurementSession(
+            "fast_mode_quantiles", order, SimulatedTimer(profiles, seed=43),
+            m_per_iteration=3, eps=0.03, max_measurements=45,
+            quantile_ranges=FAST_MODE_QUANTILE_RANGES,
+            report_range=(15.0, 45.0),
+        ),
+        MeasurementSession(
+            "shared_node", sorted(shared), SimulatedTimer(shared, seed=7),
+            m_per_iteration=3, eps=0.03, max_measurements=45,
+        ),
+        MeasurementSession(
+            "exclusive_node", sorted(exclusive), SimulatedTimer(exclusive, seed=7),
+            m_per_iteration=3, eps=0.03, max_measurements=45,
+        ),
+    ]
+
+
+def run(smoke: bool, out: List[str], ctx=None) -> None:
+    t0 = time.time()
+    engine = run_campaign(_sessions, "turbo", ctx)
+    results = engine.results()
+
+    res_default = results["default_quantiles"]
+    out.append(
+        "turbo.default_quantiles,0,"
+        + "|".join(f"{a.name}:r{a.rank}" for a in res_default.sequence)
+    )
+    merged = max(r for r in res_default.ranks.values()) <= 2
+    out.append(f"turbo.default_mostly_merged,0,{merged}")
+
+    res_fast = results["fast_mode_quantiles"]
+    out.append(
+        "turbo.fast_mode_quantiles,0,"
+        + "|".join(f"{a.name}:r{a.rank}" for a in res_fast.sequence)
+    )
+    out.append(
+        f"turbo.alg5_best_in_fast_mode,0,{res_fast.ranks['alg5'] == 1 and res_fast.sequence[0].name == 'alg5'}"
+    )
+
+    n_shared = results["shared_node"].measurements_per_alg
+    n_excl = results["exclusive_node"].measurements_per_alg
     out.append(
         f"turbo.measurements_shared_vs_exclusive,0,{n_shared} vs {n_excl} "
         "(paper Sec. IV: exclusive/bimodal needs more measurements: 15 vs 27)"
+    )
+    out.append(
+        f"turbo.campaign,{(time.time()-t0)*1e6:.0f},"
+        f"{engine.steps_taken} engine iterations "
+        f"across {len(engine)} interleaved sessions"
     )

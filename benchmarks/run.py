@@ -1,10 +1,16 @@
 """Benchmark harness — one module per paper table/figure + framework sites.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
+                                            [--state-dir DIR] [--resume]
 
 Output: ``name,us_per_call,derived`` CSV lines (one per measured table row).
 ``--smoke`` runs reduced instance sizes (CI); the default reproduces the
 paper-scale instances (minutes on one CPU core).
+
+Measurement loops run as ExperimentEngine campaigns. With ``--state-dir``
+each campaign persists its sessions (measurement stores, iteration history,
+simulated-timer RNG state) to ``DIR/<campaign>.json``; ``--resume`` picks a
+killed invocation back up exactly where it stopped instead of re-measuring.
 
 Modules:
   paper_tables — Tables I/II/III, Fig. 5, Fig. 7b on real measurements
@@ -27,6 +33,7 @@ from . import (
     bench_turbo,
     bench_variant_sites,
 )
+from .common import BenchContext
 
 MODULES = {
     "paper_tables": bench_paper_tables.run,
@@ -41,7 +48,14 @@ def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="reduced sizes (CI)")
     p.add_argument("--only", default=None, choices=list(MODULES))
+    p.add_argument("--state-dir", default=None,
+                   help="persist engine campaigns to DIR/<name>.json")
+    p.add_argument("--resume", action="store_true",
+                   help="resume persisted campaigns from --state-dir")
     args = p.parse_args()
+    if args.resume and not args.state_dir:
+        p.error("--resume requires --state-dir")
+    ctx = BenchContext(state_dir=args.state_dir, resume=args.resume)
 
     out: List[str] = []
     t_all = time.time()
@@ -50,7 +64,7 @@ def main() -> None:
         t0 = time.time()
         print(f"# running {name} ...", file=sys.stderr, flush=True)
         try:
-            MODULES[name](args.smoke, out)
+            MODULES[name](args.smoke, out, ctx)
         except Exception as e:  # keep the harness going; record the failure
             out.append(f"{name}.ERROR,0,{type(e).__name__}: {e}")
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)

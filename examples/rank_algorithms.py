@@ -2,10 +2,17 @@
 implementation variants inside the framework.
 
 Runs three variant sites (MoE dispatch, attention implementation, SSD chunk
-length), prints the full ranking pipeline per site — candidate filtering,
-converged performance classes, FLOPs-discriminant verdict, selection.
+length) as ONE interleaved ExperimentEngine campaign via ``rank_sites`` —
+the scheduler spends Procedure-4 iterations on whichever site is farthest
+from convergence — then prints the full ranking pipeline per site:
+candidate filtering, converged performance classes, FLOPs-discriminant
+verdict, selection.
 
-    PYTHONPATH=src python examples/rank_algorithms.py
+    PYTHONPATH=src python examples/rank_algorithms.py \
+        [--policy least_converged_first] [--max-steps N]
+
+``--max-steps`` demonstrates a budgeted campaign: reports are best-so-far
+(check ``converged`` per site) instead of blocking until every site stops.
 """
 
 import argparse
@@ -13,7 +20,7 @@ import argparse
 from repro.autotune import (
     attention_site,
     moe_dispatch_site,
-    rank_site,
+    rank_sites,
     ssd_chunk_site,
 )
 
@@ -21,6 +28,10 @@ from repro.autotune import (
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--policy", default="least_converged_first",
+                    choices=["round_robin", "least_converged_first"])
+    ap.add_argument("--max-steps", type=int, default=None,
+                    help="stop the campaign after N engine iterations")
     args = ap.parse_args()
     s = args.scale
 
@@ -29,11 +40,19 @@ def main() -> None:
         attention_site(b=2, s=int(1024 * s), h=8, kv=2, d=64),
         ssd_chunk_site(b=2, s=int(1024 * s), h=8, p=32, n=32, chunks=(64, 128, 256)),
     ]
+    reports = rank_sites(
+        sites, max_measurements=18, policy=args.policy, max_steps=args.max_steps
+    )
     for site in sites:
-        report = rank_site(site, max_measurements=18)
+        report = reports.get(site.name)
+        if report is None:  # never scheduled before the step budget ran out
+            print(f"site {site.name}: no iterations yet (raise --max-steps)\n")
+            continue
         print(report.summary())
         if report.dropped:
             print(f"  dropped by RT filter: {', '.join(report.dropped)}")
+        if not report.ranking.converged:
+            print("  (not converged: campaign budget hit; ranks are best-so-far)")
         print()
 
 

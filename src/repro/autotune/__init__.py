@@ -1,7 +1,18 @@
 """repro.autotune — the paper's ranking methodology as the framework's
-variant selector (measured or cost-modelled)."""
+variant selector (measured or cost-modelled), campaign-capable via the
+core ExperimentEngine."""
 
-from .tuner import TuneReport, rank_site, rank_site_costmodel
+from .tuner import (
+    CampaignSite,
+    TuneReport,
+    build_session,
+    prepare_site,
+    rank_site,
+    rank_site_costmodel,
+    rank_sites,
+    report_from_session,
+    reports_from_engine,
+)
 from .variants import (
     Variant,
     VariantSite,
@@ -12,13 +23,19 @@ from .variants import (
 )
 
 __all__ = [
+    "CampaignSite",
     "TuneReport",
     "Variant",
     "VariantSite",
     "attention_site",
+    "build_session",
     "matmul_blocks_site",
     "moe_dispatch_site",
+    "prepare_site",
     "rank_site",
     "rank_site_costmodel",
+    "rank_sites",
+    "report_from_session",
+    "reports_from_engine",
     "ssd_chunk_site",
 ]

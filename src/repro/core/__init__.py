@@ -13,15 +13,20 @@ from .convergence import (
     measure_and_rank,
 )
 from .discriminant import flops_discriminant_test
+from .engine import POLICIES, ExperimentEngine
 from .meanrank import MeanRankResult, mean_ranks
 from .measure import (
     CostModelTimer,
+    DetachedTimer,
     MeasurementStore,
     NoiseProfile,
     SimulatedTimer,
     Timer,
     WallClockTimer,
+    timer_from_dict,
+    timer_to_dict,
 )
+from .session import MeasurementSession
 from .ranking import (
     make_measurement_comparator,
     ranks_as_dict,
@@ -53,13 +58,17 @@ __all__ = [
     "CandidateSet",
     "CostModelTimer",
     "DEFAULT_QUANTILE_RANGES",
+    "DetachedTimer",
     "DiscriminantReport",
+    "ExperimentEngine",
     "FAST_MODE_QUANTILE_RANGES",
     "IterationRecord",
     "MeanRankResult",
+    "MeasurementSession",
     "MeasurementStore",
     "NoiseProfile",
     "Outcome",
+    "POLICIES",
     "QuantileRange",
     "RankedAlgorithm",
     "RankingResult",
@@ -85,4 +94,6 @@ __all__ = [
     "relative_times",
     "sort_algorithms",
     "sort_by_measurements",
+    "timer_from_dict",
+    "timer_to_dict",
 ]

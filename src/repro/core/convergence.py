@@ -11,41 +11,36 @@ quantile ladder, and stops when the *shape* of the rank landscape stabilises:
     stop when  ||dx - dy||_2 / p  <  eps    (dy = previous iteration's dx)
 
 or when ``N`` reaches the user budget ``max``.
+
+The loop body lives in :class:`repro.core.session.MeasurementSession`
+(one ``step()`` per iteration, fully serializable); this module keeps the
+original blocking driver with its exact public signature. Campaigns over
+many instances go through :class:`repro.core.engine.ExperimentEngine`
+instead of calling this in a loop.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
-import numpy as np
-
-from .meanrank import mean_ranks
 from .measure import MeasurementStore, Timer
+from .session import (  # re-exported for backwards compatibility
+    MeasurementSession,
+    convergence_norm,
+    first_differences,
+)
 from .types import (
     DEFAULT_QUANTILE_RANGES,
     REPORT_QUANTILE_RANGE,
-    IterationRecord,
     QuantileRange,
-    RankedAlgorithm,
     RankingResult,
 )
 
-
-def first_differences(x: Sequence[float]) -> np.ndarray:
-    """``convolution(x, [1, -1], step=1)`` — adjacent mean-rank deltas."""
-    arr = np.asarray(x, dtype=np.float64)
-    if arr.size < 2:
-        return np.zeros(0, dtype=np.float64)
-    return arr[1:] - arr[:-1]
-
-
-def convergence_norm(dx: np.ndarray, dy: np.ndarray, p: int) -> float:
-    """``||dx - dy||_2 / p`` (paper's stopping criterion)."""
-    if dx.shape != dy.shape:
-        raise ValueError(f"dx/dy shape mismatch: {dx.shape} vs {dy.shape}")
-    if p <= 0:
-        raise ValueError("p must be positive")
-    return float(np.linalg.norm(dx - dy) / p)
+__all__ = [
+    "convergence_norm",
+    "first_differences",
+    "measure_and_rank",
+]
 
 
 def measure_and_rank(
@@ -60,7 +55,7 @@ def measure_and_rank(
     store: Optional[MeasurementStore] = None,
     shuffle_seed: Optional[int] = 0,
 ) -> RankingResult:
-    """Procedure 4.
+    """Procedure 4 — blocking drive of a single measurement session.
 
     Parameters
     ----------
@@ -73,7 +68,9 @@ def measure_and_rank(
         ``M``, ``eps``, ``max`` of the paper (defaults = paper Sec. IV).
     store:
         Optional pre-populated measurement store (warm-start); new
-        measurements are appended to it.
+        measurements are appended to it. A store that already holds >= 1
+        measurement per algorithm at (or past) the budget is ranked as-is —
+        no measurements are taken beyond ``max_measurements``.
     shuffle_seed:
         Seed for the pre-iteration shuffle (None disables shuffling).
 
@@ -82,75 +79,17 @@ def measure_and_rank(
     RankingResult with the final ``s_[25,75]`` sequence, mean ranks,
     convergence flag and full per-iteration history.
     """
-    order: List[str] = list(initial_order)
-    p = len(order)
-    if p == 0:
-        raise ValueError("need at least one algorithm")
-    store = store if store is not None else MeasurementStore()
-    rng = np.random.default_rng(shuffle_seed) if shuffle_seed is not None else None
-
-    history: List[IterationRecord] = []
-    dy = np.ones(max(p - 1, 0), dtype=np.float64)  # paper: initialize dy_j <- 1
-    norm = float("inf")
-    converged = False
-    n = store.min_count()
-
-    last_result = None
-    while n < max_measurements:
-        for name in order:
-            store.add(name, timer.measure_many(name, m_per_iteration))
-        n = store.min_count()
-        if rng is not None:
-            store.shuffle(rng)
-
-        mr = mean_ranks(
-            order,
-            store.as_mapping(),
-            quantile_ranges=quantile_ranges,
-            report_range=report_range,
-            tie_break=tie_break,
-        )
-        last_result = mr
-        x = np.asarray(mr.ordered_mean_ranks(), dtype=np.float64)
-        dx = first_differences(x)
-        norm = convergence_norm(dx, dy, p)
-        dy = dx
-        order = list(mr.order)  # h_0 <- ordering from s_[25,75]
-
-        history.append(
-            IterationRecord(
-                measurements_per_alg=n,
-                order=tuple(mr.order),
-                ranks=tuple(mr.ranks),
-                mean_ranks=tuple(mr.mean_ranks[name] for name in mr.order),
-                norm=norm,
-            )
-        )
-        if norm < eps:
-            converged = True
-            break
-
-    if last_result is None:
-        # max_measurements smaller than one iteration's worth: measure once.
-        for name in order:
-            store.add(name, timer.measure_many(name, max(1, m_per_iteration)))
-        last_result = mean_ranks(
-            order,
-            store.as_mapping(),
-            quantile_ranges=quantile_ranges,
-            report_range=report_range,
-            tie_break=tie_break,
-        )
-        n = store.min_count()
-
-    sequence = [
-        RankedAlgorithm(name=name, rank=rank, mean_rank=last_result.mean_ranks[name])
-        for name, rank in zip(last_result.order, last_result.ranks)
-    ]
-    return RankingResult(
-        sequence=sequence,
-        mean_ranks=dict(last_result.mean_ranks),
-        measurements_per_alg=n,
-        converged=converged,
-        history=history,
+    session = MeasurementSession(
+        "measure_and_rank",
+        initial_order,
+        timer,
+        m_per_iteration=m_per_iteration,
+        eps=eps,
+        max_measurements=max_measurements,
+        quantile_ranges=quantile_ranges,
+        report_range=report_range,
+        tie_break=tie_break,
+        store=store,
+        shuffle_seed=shuffle_seed,
     )
+    return session.run_to_convergence()

@@ -19,11 +19,23 @@ All timers return seconds.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
+
+
+def rng_state(rng: np.random.Generator) -> Dict[str, Any]:
+    """JSON-serializable state of a numpy Generator (exact-resume support)."""
+    return rng.bit_generator.state
+
+
+def rng_from_state(state: Mapping[str, Any]) -> np.random.Generator:
+    rng = np.random.default_rng(0)
+    rng.bit_generator.state = dict(state)
+    return rng
 
 
 class MeasurementStore:
@@ -64,6 +76,17 @@ class MeasurementStore:
     def __contains__(self, name: str) -> bool:
         return name in self._data
 
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot (engine persistence, reanalysis)."""
+        return {"measurements": {k: list(v) for k, v in self._data.items()}}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MeasurementStore":
+        store = cls()
+        for name, values in d["measurements"].items():
+            store.add(name, values)
+        return store
+
 
 class Timer:
     """Protocol: measure(name) -> one execution time in seconds."""
@@ -77,6 +100,16 @@ class Timer:
     def warmup(self, name: str, reps: int = 1) -> None:
         for _ in range(reps):
             self.measure(name)
+
+    def snapshot(self) -> Any:
+        """Opaque rollback token for transactional measurement batches
+        (None for stateless backends). Stateful backends (RNG-driven)
+        override so an interrupted batch can be undone, keeping persisted
+        campaign state consistent for bit-identical resume."""
+        return None
+
+    def restore(self, snap: Any) -> None:
+        return None
 
 
 class WallClockTimer(Timer):
@@ -138,6 +171,12 @@ class SimulatedTimer(Timer):
             t *= p.outlier_scale
         return t
 
+    def snapshot(self) -> Any:
+        return rng_state(self._rng)
+
+    def restore(self, snap: Any) -> None:
+        self._rng = rng_from_state(snap)
+
 
 class CostModelTimer(Timer):
     """Deterministic cost-model times with optional measurement noise.
@@ -164,3 +203,80 @@ class CostModelTimer(Timer):
         if self._rel_sigma > 0.0:
             t *= float(np.exp(self._rng.normal(0.0, self._rel_sigma)))
         return t
+
+    def snapshot(self) -> Any:
+        return rng_state(self._rng)
+
+    def restore(self, snap: Any) -> None:
+        self._rng = rng_from_state(snap)
+
+
+class DetachedTimer(Timer):
+    """Placeholder for sessions restored without a measurement backend
+    (e.g. a wall-clock campaign loaded on another host). Ranking existing
+    data works; any attempt to *measure* fails loudly."""
+
+    def __init__(self, names: Sequence[str] = ()) -> None:
+        self.names = tuple(names)
+
+    def measure(self, name: str) -> float:
+        raise RuntimeError(
+            "session has no measurement backend attached; rebuild the "
+            "workloads and pass timers=/workloads= to ExperimentEngine.load "
+            "(or call session.attach_timer)"
+        )
+
+
+def timer_to_dict(timer: Timer) -> Dict[str, Any]:
+    """Serialize a timer. Simulated and cost-model backends round-trip
+    exactly (RNG state included), which is what makes kill/resume campaigns
+    bit-identical to uninterrupted runs. Wall-clock backends record their
+    workload names only — the callables must be re-attached on load."""
+    if isinstance(timer, SimulatedTimer):
+        return {
+            "kind": "simulated",
+            "profiles": {
+                name: dataclasses.asdict(p) for name, p in timer._profiles.items()
+            },
+            "rng_state": rng_state(timer._rng),
+        }
+    if isinstance(timer, CostModelTimer):
+        return {
+            "kind": "cost_model",
+            "costs": dict(timer._costs),
+            "rel_sigma": timer._rel_sigma,
+            "rng_state": rng_state(timer._rng),
+        }
+    if isinstance(timer, WallClockTimer):
+        return {"kind": "wall_clock", "workloads": sorted(timer._workloads)}
+    return {"kind": "opaque", "type": type(timer).__name__}
+
+
+def timer_from_dict(
+    d: Mapping[str, Any], workloads: Optional[Mapping[str, Callable[[], object]]] = None
+) -> Timer:
+    """Inverse of :func:`timer_to_dict`. ``workloads`` re-attaches callables
+    for wall-clock backends; without it a :class:`DetachedTimer` is returned
+    so ranking-as-is still works."""
+    kind = d.get("kind", "opaque")
+    if kind == "simulated":
+        timer = SimulatedTimer(
+            {name: NoiseProfile(**p) for name, p in d["profiles"].items()}
+        )
+        timer._rng = rng_from_state(d["rng_state"])
+        return timer
+    if kind == "cost_model":
+        timer = CostModelTimer(d["costs"], rel_sigma=float(d["rel_sigma"]))
+        timer._rng = rng_from_state(d["rng_state"])
+        return timer
+    if kind == "wall_clock":
+        names = d.get("workloads", ())
+        if workloads is not None:
+            missing = [n for n in names if n not in workloads]
+            if missing:
+                raise ValueError(f"workloads missing for {missing}")
+            return WallClockTimer(workloads)
+        return DetachedTimer(names)
+    if workloads is not None:
+        return WallClockTimer(workloads)
+    return DetachedTimer()

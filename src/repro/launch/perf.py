@@ -14,6 +14,18 @@ Kernel adjustment (the Pallas flash-attention path on real TPU):
     (block-level skip in the kernel vs the rectangle the XLA path runs).
 Both the XLA-path and kernel-path terms are recorded so the §Perf table
 shows measured vs modelled-on-TPU numbers separately.
+
+Campaign mode — rank the logged iterations of one (arch, shape) pair with
+the paper's methodology over the roofline cost model:
+
+    python -m repro.launch.perf --rank-labels --arch ... --shape ... \
+        [--rel-sigma 0.05] [--max-steps N] [--resume]
+
+Each logged label becomes an algorithm; a CostModelTimer draws from its
+kernel-adjusted bounding term. The ExperimentEngine campaign persists to
+reports/perf_campaign_<arch>_<shape>.json, so a partial run (--max-steps)
+resumes bit-identically with --resume (cost-model timers serialize their
+RNG state).
 """
 
 import argparse
@@ -119,14 +131,87 @@ def run_iteration(
     return row
 
 
+def campaign_path(arch: str, shape: str) -> str:
+    safe = f"{arch}_{shape}".replace("/", "_").replace(".", "_")
+    return os.path.join(ROOT, "reports", f"perf_campaign_{safe}.json")
+
+
+def rank_logged_labels(
+    arch: str,
+    shape: str,
+    rel_sigma: float = 0.05,
+    max_steps: Optional[int] = None,
+    resume: bool = False,
+):
+    """Rank this (arch, shape)'s logged §Perf iterations as an engine
+    campaign over the kernel-adjusted roofline model. Returns the
+    TuneReport, or None when fewer than two labels are logged."""
+    from repro.autotune import CampaignSite, rank_sites
+    from repro.core import CostModelTimer
+
+    rows = json.load(open(LOG)) if os.path.exists(LOG) else []
+    rows = [r for r in rows if r.get("arch") == arch and r.get("shape") == shape]
+    state = campaign_path(arch, shape)
+    site_name = f"{arch}/{shape}"
+
+    if resume and os.path.exists(state):
+        reports = rank_sites(resume_from=state, max_steps=max_steps,
+                             save_path=state)
+        return reports.get(site_name)
+
+    costs, flops = {}, {}
+    for r in rows:
+        ka = r.get("kernel_adjusted", {})
+        label = r.get("label")
+        if not label or not ka:
+            continue
+        costs[label] = max(
+            ka.get("t_compute_s", 0.0), ka.get("t_memory_s", 0.0),
+            ka.get("t_collective_s", 0.0),
+        )
+        flops[label] = float(r.get("hlo_flops_per_dev", "0") or 0)
+    if len(costs) < 2:
+        return None
+    site = CampaignSite(
+        name=site_name,
+        timer=CostModelTimer(costs, rel_sigma=rel_sigma),
+        flops=flops,
+        backend="cost-model",
+    )
+    reports = rank_sites([site], max_steps=max_steps, save_path=state)
+    return reports[site_name]
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True)
     p.add_argument("--shape", required=True)
-    p.add_argument("--label", required=True)
+    p.add_argument("--label", default=None)
     p.add_argument("--hypothesis", default="")
     p.add_argument("--override", default=None)
+    p.add_argument("--rank-labels", action="store_true",
+                   help="rank this (arch, shape)'s logged labels as an "
+                        "engine campaign over the roofline cost model")
+    p.add_argument("--rel-sigma", type=float, default=0.05)
+    p.add_argument("--max-steps", type=int, default=None)
+    p.add_argument("--resume", action="store_true",
+                   help="resume a persisted --rank-labels campaign")
     args = p.parse_args()
+
+    if args.rank_labels:
+        report = rank_logged_labels(
+            args.arch, args.shape, rel_sigma=args.rel_sigma,
+            max_steps=args.max_steps, resume=args.resume,
+        )
+        if report is None:
+            print(f"need >= 2 logged labels for {args.arch}/{args.shape} in {LOG}")
+        else:
+            print(report.summary())
+            print(f"campaign state: {campaign_path(args.arch, args.shape)}")
+        return
+
+    if args.label is None:
+        p.error("--label is required unless --rank-labels is given")
     row = run_iteration(
         args.arch, args.shape, args.label,
         overrides=json.loads(args.override) if args.override else None,

@@ -5,6 +5,16 @@
 Reads reports/hlo/<arch>_<shape>_<mesh>.txt.gz written by dryrun.py and
 rewrites the matching report rows with the CURRENT analyzer — analyzer
 iterations (the §Perf loop) never pay the compile cost twice.
+
+Campaign reanalysis — the same never-remeasure principle for the ranking
+methodology:
+
+    python -m repro.launch.reanalyze --campaign reports/perf_campaign_X.json
+
+Loads a persisted ExperimentEngine state (sessions restore with a detached
+timer — no measurement backend needed), re-runs Procedure 3 (mean ranks
+over the quantile ladder) on every session's STORED measurements with the
+current code, and prints stored-vs-recomputed rankings per session.
 """
 
 import argparse
@@ -19,10 +29,49 @@ from repro.roofline import analyze, terms_from_counts
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../.."))
 
 
+def reanalyze_campaign(path: str) -> None:
+    """Re-rank a persisted campaign's measurement stores (no re-measuring)."""
+    from repro.core import ExperimentEngine, mean_ranks
+
+    engine = ExperimentEngine.load(path)
+    print(f"campaign {path}: {len(engine)} sessions, "
+          f"{engine.steps_taken} iterations taken, policy={engine.policy}")
+    for session in engine:
+        if session.measurements_per_alg == 0:
+            print(f"  {session.name}: no measurements yet; skipped")
+            continue
+        mr = mean_ranks(
+            session.order,
+            session.store.as_mapping(),
+            quantile_ranges=session.quantile_ranges,
+            report_range=session.report_range,
+            tie_break=session.tie_break,
+        )
+        stored = session.history[-1] if session.history else None
+        stored_seq = (
+            "|".join(f"{n}:r{r}" for n, r in zip(stored.order, stored.ranks))
+            if stored else "<none>"
+        )
+        fresh_seq = "|".join(f"{n}:r{r}" for n, r in zip(mr.order, mr.ranks))
+        flag = "" if stored_seq == fresh_seq else "  <-- CHANGED"
+        print(f"  {session.name}: N={session.measurements_per_alg} "
+              f"converged={session.converged}")
+        print(f"    stored:     {stored_seq}")
+        print(f"    reanalyzed: {fresh_seq}{flag}")
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--campaign", default=None,
+                   help="re-rank a persisted ExperimentEngine state file "
+                        "instead of the roofline reports")
     args = p.parse_args()
+    if args.campaign:
+        if not os.path.exists(args.campaign):
+            p.error(f"no campaign state at {args.campaign}")
+        reanalyze_campaign(args.campaign)
+        return
     label = "2x16x16" if args.mesh == "multi" else "16x16"
     n_dev = 512 if args.mesh == "multi" else 256
     report = os.path.join(ROOT, f"reports/dryrun_{label}.json")

@@ -1,0 +1,46 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly. On a bare environment the property-based tests are
+skipped (each replaced by a zero-arg skipper), while every example-based
+test in the same module still collects and runs — the tier-1 suite must
+never fail at collection over an optional dependency.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only on bare envs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Accepts any strategy-building syntax and returns itself."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

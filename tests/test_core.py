@@ -1,8 +1,11 @@
-"""Unit + property tests for repro.core — the paper's Procedures 1-4."""
+"""Unit tests for repro.core — the paper's Procedures 1-4.
+
+Property-based variants live in test_core_properties.py (they need the
+optional ``hypothesis`` package; this module must collect on a bare env).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     DEFAULT_QUANTILE_RANGES,
@@ -11,6 +14,7 @@ from repro.core import (
     NoiseProfile,
     Outcome,
     SimulatedTimer,
+    Timer,
     compare_measurements,
     convergence_norm,
     filter_candidates,
@@ -60,24 +64,6 @@ def test_wider_range_merges_more():
     assert narrow is Outcome.BETTER
 
 
-@given(
-    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
-    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
-)
-@settings(max_examples=60, deadline=None)
-def test_comparison_antisymmetric(a, b):
-    """Property: cmp(a, b) is the flip of cmp(b, a)."""
-    ab = compare_measurements(a, b, 25, 75)
-    ba = compare_measurements(b, a, 25, 75)
-    assert ab is ba.flipped()
-
-
-@given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40))
-@settings(max_examples=30, deadline=None)
-def test_comparison_reflexive_equivalent(a):
-    assert compare_measurements(a, a, 25, 75) is Outcome.EQUIVALENT
-
-
 # ----------------------------------------------------------- Procedure 2 ---
 
 def _paper_fig4_comparator():
@@ -117,27 +103,6 @@ def test_sort_literal_rule_differs():
 
 def test_sort_single_and_empty():
     assert sort_algorithms(["x"], lambda a, b: Outcome.EQUIVALENT) == (["x"], [1])
-
-
-@given(
-    st.lists(st.floats(0.5, 5.0), min_size=2, max_size=8),
-    st.floats(0.0, 0.3),
-)
-@settings(max_examples=40, deadline=None)
-def test_sort_rank_invariants(base_times, spread):
-    """Property: ranks start at 1, are non-decreasing along the sequence,
-    and adjacent ranks differ by at most 1 — for arbitrary measurement
-    tables."""
-    rng = np.random.default_rng(42)
-    meas = {
-        f"a{i}": rng.normal(t, max(spread * t, 1e-6), 12).clip(1e-3).tolist()
-        for i, t in enumerate(base_times)
-    }
-    names, ranks = sort_by_measurements(sorted(meas), meas, (25, 75))
-    assert ranks[0] == 1
-    for r0, r1 in zip(ranks, ranks[1:]):
-        assert r0 <= r1 <= r0 + 1
-    assert sorted(names) == sorted(meas)
 
 
 def test_sort_separated_distributions_fully_ordered():
@@ -221,6 +186,42 @@ def test_cost_model_timer_deterministic():
     timer = CostModelTimer({"x": 1.0, "y": 2.0})
     res = measure_and_rank(["y", "x"], timer, m_per_iteration=2, max_measurements=8)
     assert res.ranks == {"x": 1, "y": 2}
+
+
+class _ExplodingTimer(Timer):
+    """Fails on any measurement — proves warm-start paths never measure."""
+
+    def measure(self, name: str) -> float:
+        raise AssertionError(f"unexpected measurement of {name!r}")
+
+
+def test_warm_start_full_store_ranks_without_measuring():
+    """A pre-populated store at (or past) the budget must be ranked as-is,
+    not measured again past ``max_measurements`` (the old fallback bug)."""
+    store = MeasurementStore()
+    store.add("fast", [1.0 + 0.01 * i for i in range(10)])
+    store.add("slow", [2.0 + 0.01 * i for i in range(10)])
+    res = measure_and_rank(
+        ["fast", "slow"], _ExplodingTimer(),
+        m_per_iteration=3, max_measurements=10, store=store,
+    )
+    assert res.ranks == {"fast": 1, "slow": 2}
+    assert res.measurements_per_alg == 10
+    assert store.counts() == {"fast": 10, "slow": 10}
+
+
+def test_warm_start_partial_store_measures_only_missing():
+    """Algorithms with zero data still get one batch; warm ones do not."""
+    store = MeasurementStore()
+    store.add("warm", [1.0] * 12)
+    timer = CostModelTimer({"warm": 1.0, "cold": 2.0})
+    res = measure_and_rank(
+        ["warm", "cold"], timer,
+        m_per_iteration=3, max_measurements=10, store=store,
+    )
+    assert len(store.get("warm")) == 12          # untouched
+    assert len(store.get("cold")) == 3           # one batch of M
+    assert res.ranks == {"warm": 1, "cold": 2}
 
 
 # ------------------------------------------------------ scores / filters ---

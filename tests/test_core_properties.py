@@ -1,0 +1,53 @@
+"""Property-based tests for repro.core (require ``hypothesis``).
+
+Kept separate from test_core.py so the example-based tier-1 suite collects
+and runs on environments without hypothesis installed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Outcome, compare_measurements, sort_by_measurements
+
+
+@given(
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+)
+@settings(max_examples=60, deadline=None)
+def test_comparison_antisymmetric(a, b):
+    """Property: cmp(a, b) is the flip of cmp(b, a)."""
+    ab = compare_measurements(a, b, 25, 75)
+    ba = compare_measurements(b, a, 25, 75)
+    assert ab is ba.flipped()
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_comparison_reflexive_equivalent(a):
+    assert compare_measurements(a, a, 25, 75) is Outcome.EQUIVALENT
+
+
+@given(
+    st.lists(st.floats(0.5, 5.0), min_size=2, max_size=8),
+    st.floats(0.0, 0.3),
+)
+@settings(max_examples=40, deadline=None)
+def test_sort_rank_invariants(base_times, spread):
+    """Property: ranks start at 1, are non-decreasing along the sequence,
+    and adjacent ranks differ by at most 1 — for arbitrary measurement
+    tables."""
+    rng = np.random.default_rng(42)
+    meas = {
+        f"a{i}": rng.normal(t, max(spread * t, 1e-6), 12).clip(1e-3).tolist()
+        for i, t in enumerate(base_times)
+    }
+    names, ranks = sort_by_measurements(sorted(meas), meas, (25, 75))
+    assert ranks[0] == 1
+    for r0, r1 in zip(ranks, ranks[1:]):
+        assert r0 <= r1 <= r0 + 1
+    assert sorted(names) == sorted(meas)

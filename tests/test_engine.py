@@ -1,0 +1,280 @@
+"""Tests for the ExperimentEngine subsystem: sessions, scheduling policies,
+JSON persistence / resume, and the interleaved rank_sites campaigns."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExperimentEngine,
+    MeasurementSession,
+    MeasurementStore,
+    NoiseProfile,
+    SimulatedTimer,
+    measure_and_rank,
+    timer_from_dict,
+    timer_to_dict,
+)
+from repro.autotune import CampaignSite, rank_sites, reports_from_engine
+
+
+def _profiles(bases, rel_sigma=0.05):
+    return {n: NoiseProfile(base=b, rel_sigma=rel_sigma) for n, b in bases.items()}
+
+
+BASES = {"a": 1.0, "b": 1.05, "c": 1.5, "d": 1.52}
+
+
+def _timer(seed=5):
+    return SimulatedTimer(_profiles(BASES), seed=seed)
+
+
+# ------------------------------------------------------------- sessions ---
+
+def test_session_steps_match_measure_and_rank_iteration_for_iteration():
+    """Stepping a session manually reproduces measure_and_rank exactly:
+    same history records, same final ranks, same convergence flag."""
+    ref = measure_and_rank(
+        sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    session = MeasurementSession(
+        "s", sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    steps = 0
+    while not session.done:
+        rec = session.step()
+        assert rec == ref.history[steps]
+        steps += 1
+    assert steps == len(ref.history)
+    assert session.result() == ref
+
+
+def test_session_json_roundtrip_resumes_bit_identical():
+    """Kill a session mid-campaign, serialize through real JSON text, resume
+    — the final result equals the uninterrupted run's."""
+    ref = measure_and_rank(
+        sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    session = MeasurementSession(
+        "s", sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    session.step()
+    session.step()
+    blob = json.dumps(session.to_dict())
+    resumed = MeasurementSession.from_dict(json.loads(blob))
+    while not resumed.done:
+        resumed.step()
+    assert resumed.result() == ref
+
+
+def test_interrupt_mid_step_rolls_back_and_resumes_bit_identical():
+    """An interrupt inside step()'s measurement loop must not persist a
+    partial batch or a shifted timer RNG stream: a save taken after the
+    exception sits at a whole-iteration boundary, so resume still matches
+    the uninterrupted run exactly."""
+
+    class Interrupting(SimulatedTimer):
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            self.calls = 0
+            self.explode_at = None
+
+        def measure(self, name):
+            self.calls += 1
+            if self.explode_at is not None and self.calls >= self.explode_at:
+                raise KeyboardInterrupt
+            return super().measure(name)
+
+    ref = measure_and_rank(
+        sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    timer = Interrupting(_profiles(BASES), seed=5)
+    session = MeasurementSession(
+        "s", sorted(BASES), timer, m_per_iteration=3, eps=0.02, max_measurements=36
+    )
+    session.step()
+    timer.explode_at = timer.calls + 5  # mid-batch of the second iteration
+    with pytest.raises(KeyboardInterrupt):
+        session.step()
+    assert session.measurements_per_alg == 3  # partial batch rolled back
+    timer.explode_at = None
+
+    blob = json.dumps(session.to_dict())
+    resumed = MeasurementSession.from_dict(json.loads(blob))
+    while not resumed.done:
+        resumed.step()
+    assert resumed.result() == ref
+
+
+def test_rank_sites_rejects_sites_combined_with_resume_from(tmp_path):
+    state = os.fspath(tmp_path / "campaign.json")
+    rank_sites(_campaign_sites(), max_steps=1, save_path=state,
+               m_per_iteration=3, eps=0.02, max_measurements=30)
+    with pytest.raises(ValueError):
+        rank_sites(_campaign_sites(), resume_from=state)
+
+
+def test_detached_session_ranks_existing_data_but_cannot_measure():
+    session = MeasurementSession(
+        "s", sorted(BASES), _timer(), eps=-1.0, max_measurements=30
+    )
+    session.step()
+    d = session.to_dict(include_timer=False)
+    detached = MeasurementSession.from_dict(d)
+    # ranking the persisted data needs no backend ...
+    assert detached.result().names_in_order == session.result().names_in_order
+    # ... but stepping does
+    with pytest.raises(RuntimeError):
+        detached.step()
+
+
+# ---------------------------------------------------------- store / timer ---
+
+def test_measurement_store_json_roundtrip():
+    store = MeasurementStore()
+    store.add("x", [1.0, 2.5, 3.25])
+    store.add("y", [0.125])
+    blob = json.dumps(store.to_dict())
+    back = MeasurementStore.from_dict(json.loads(blob))
+    assert dict(back.as_mapping()) == dict(store.as_mapping())
+    assert back.min_count() == store.min_count()
+    assert back.counts() == store.counts()
+
+
+def test_simulated_timer_roundtrip_preserves_rng_stream():
+    t1 = _timer(seed=13)
+    [t1.measure("a") for _ in range(5)]
+    t2 = timer_from_dict(json.loads(json.dumps(timer_to_dict(t1))))
+    assert [t1.measure("a") for _ in range(4)] == [t2.measure("a") for _ in range(4)]
+
+
+# ------------------------------------------------------------ scheduling ---
+
+def _never_converging_session(name, seed):
+    return MeasurementSession(
+        name, sorted(BASES), _timer(seed), m_per_iteration=3,
+        eps=-1.0, max_measurements=12,
+    )
+
+
+def test_round_robin_covers_all_sessions():
+    engine = ExperimentEngine(policy="round_robin")
+    for i in range(3):
+        engine.add_session(_never_converging_session(f"s{i}", i))
+    for _ in range(3):
+        engine.step()
+    assert [s.iterations for s in engine.sessions] == [1, 1, 1]
+    results = engine.run()
+    assert engine.done
+    assert set(results) == {"s0", "s1", "s2"}
+    assert all(s.measurements_per_alg == 12 for s in engine.sessions)
+
+
+def test_least_converged_first_prioritizes_unstarted_then_largest_norm():
+    engine = ExperimentEngine(policy="least_converged_first")
+    for i in range(3):
+        engine.add_session(_never_converging_session(f"s{i}", i))
+    stepped = {engine.step()[0] for _ in range(3)}
+    assert stepped == {"s0", "s1", "s2"}  # inf-norm sessions go first
+    expected = max(engine.pending(), key=lambda s: s.norm).name
+    assert engine.step()[0] == expected
+
+
+def test_until_deadline_budget_stops_campaign():
+    engine = ExperimentEngine(policy="until_deadline")
+    engine.add_session(_never_converging_session("s0", 0))
+    with pytest.raises(ValueError):
+        engine.run()  # no budget given
+    engine.run(deadline_s=0.0)
+    assert engine.steps_taken == 0 and not engine.done
+    # a real budget makes progress and still respects the measurement cap
+    engine.run(deadline_s=60.0)
+    assert engine.done
+
+
+def test_engine_rejects_duplicate_names_and_unknown_policy():
+    with pytest.raises(ValueError):
+        ExperimentEngine(policy="definitely_not_a_policy")
+    engine = ExperimentEngine()
+    engine.add_session(_never_converging_session("dup", 0))
+    with pytest.raises(ValueError):
+        engine.add_session(_never_converging_session("dup", 1))
+
+
+# ------------------------------------------------- campaigns (rank_sites) ---
+
+def _campaign_sites():
+    """Three variant sites with distinct noise landscapes + FLOP tables."""
+    sites = []
+    tables = [
+        ({"v0": 1.00, "v1": 1.04, "v2": 1.60}, {"v0": 10.0, "v1": 20.0, "v2": 5.0}),
+        ({"v0": 2.00, "v1": 1.10, "v2": 1.12}, {"v0": 10.0, "v1": 10.0, "v2": 30.0}),
+        ({"v0": 0.50, "v1": 0.80, "v2": 0.79}, {"v0": 5.0, "v1": 6.0, "v2": 7.0}),
+    ]
+    for i, (bases, flops) in enumerate(tables):
+        sites.append(
+            CampaignSite(
+                name=f"site{i}",
+                timer=SimulatedTimer(_profiles(bases, rel_sigma=0.04), seed=100 + i),
+                flops=flops,
+                initial_order=sorted(bases),
+                backend="simulated",
+            )
+        )
+    return sites
+
+
+def test_rank_sites_interleaves_kill_and_resume_to_same_ranks(tmp_path):
+    """The acceptance path: >= 3 sites as one interleaved campaign, killed
+    after N engine iterations, resumed via ExperimentEngine.load — final
+    ranks identical to the uninterrupted campaign's."""
+    kwargs = dict(m_per_iteration=3, eps=0.02, max_measurements=30,
+                  policy="least_converged_first")
+
+    full = rank_sites(_campaign_sites(), **kwargs)
+    assert len(full) == 3
+
+    state = os.fspath(tmp_path / "campaign.json")
+    partial = rank_sites(_campaign_sites(), max_steps=4, save_path=state, **kwargs)
+    assert len(partial) == 3  # best-so-far reports exist mid-campaign
+
+    engine = ExperimentEngine.load(state)
+    assert engine.pending(), "campaign should have been killed mid-flight"
+    assert engine.steps_taken == 4
+    engine.run()
+    resumed = reports_from_engine(engine)
+
+    for name, report in full.items():
+        assert resumed[name].ranking == report.ranking
+        assert resumed[name].selected == report.selected
+        assert resumed[name].discriminant.is_anomaly == report.discriminant.is_anomaly
+
+
+def test_rank_sites_resume_from_path_api(tmp_path):
+    """rank_sites(resume_from=...) finishes a killed campaign in one call."""
+    kwargs = dict(m_per_iteration=3, eps=0.02, max_measurements=30)
+    full = rank_sites(_campaign_sites(), **kwargs)
+    state = os.fspath(tmp_path / "campaign.json")
+    rank_sites(_campaign_sites(), max_steps=2, save_path=state, **kwargs)
+    resumed = rank_sites(resume_from=state, **kwargs)
+    for name, report in full.items():
+        assert resumed[name].ranking == report.ranking
+
+
+def test_rank_sites_deadline_budget_omits_unscheduled_sessions(tmp_path):
+    """Reading reports must never measure: with a zero budget nothing was
+    scheduled, so nothing is reported — and the saved state stays empty so
+    a resume re-measures nothing."""
+    state = os.fspath(tmp_path / "campaign.json")
+    reports = rank_sites(
+        _campaign_sites(), policy="until_deadline", deadline_s=0.0,
+        m_per_iteration=3, eps=0.02, max_measurements=30, save_path=state,
+    )
+    assert reports == {}
+    engine = ExperimentEngine.load(state)
+    assert all(s.measurements_per_alg == 0 for s in engine.sessions)
+    # lifting the budget completes the campaign from the persisted state
+    engine.run(deadline_s=60.0)
+    assert len(reports_from_engine(engine)) == 3

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.expressions import generate_chain_algorithms, make_chain_inputs, reference_product
 from repro.kernels import chain_matmul, flash_attention, matmul, ssd_mix

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.models.attention import decode_attention, init_kv_cache, update_kv_cache
 from repro.serve.quant import (
