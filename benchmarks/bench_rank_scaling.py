@@ -1,0 +1,127 @@
+"""Rank-scaling benchmark — analysis seconds per Procedure-4 iteration.
+
+The paper's own motivation (Sec. IV) is that compilers and generators like
+Linnea emit *hundreds* of algorithm variants per expression; at that scale
+the cost of the ranking methodology is dominated not by measuring but by
+*analysis*: the legacy pairwise path recomputes ``np.percentile`` from raw
+measurement vectors inside every comparison of an O(p²) bubble sort, once
+per quantile range, every iteration. The vectorized core (columnar store +
+batched QuantileTable + memoized sort) makes that O(p·R) percentile work.
+
+This module measures the two paths side by side on identical data:
+
+* p = 30 and p = 120 — the bench_large_chain scale (n=6 chain, instruction
+  orders included);
+* p = 429 — every parenthesization tree of an n=8 chain (Catalan(7)), the
+  scale the ROADMAP calls previously impractical; the legacy path is timed
+  for one iteration, the vectorized path additionally completes a full
+  Procedure-4 ranking to convergence.
+
+Both sessions share one SimulatedTimer seed, so the data — and, by the
+golden-equality tests, the resulting ranks — are identical; only the
+analysis cost differs. Rows report microseconds of analysis per iteration
+and the measured speedup.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import MeasurementSession, NoiseProfile, SimulatedTimer
+from repro.expressions import enumerate_trees, tree_flops, tree_label
+
+#: Skewed n=8 chain (9 dims): FLOP-diverse variant space, 429 trees.
+CHAIN_DIMS = (48, 96, 12, 128, 24, 96, 48, 64, 32)
+
+
+def _chain_profiles(p: int) -> Dict[str, NoiseProfile]:
+    """NoiseProfiles for the first ``p`` parenthesization trees of the n=8
+    chain, base = analytic GFLOPs at a nominal 1 GFLOP/s machine."""
+    trees = enumerate_trees(len(CHAIN_DIMS) - 1)
+    if p > len(trees):
+        raise ValueError(f"n=8 chain has only {len(trees)} trees, asked for {p}")
+    profiles = {}
+    for tree in trees[:p]:
+        name = tree_label(tree)
+        profiles[name] = NoiseProfile(
+            base=tree_flops(tree, CHAIN_DIMS) / 1e9, rel_sigma=0.05
+        )
+    return profiles
+
+
+def _session(
+    profiles: Dict[str, NoiseProfile], vectorized: bool, budget: int = 10_000
+) -> MeasurementSession:
+    """eps = -1 never fires, so the session runs exactly as many iterations
+    as we step it — both paths see the same timer seed, hence the same data."""
+    return MeasurementSession(
+        "rank_scaling",
+        sorted(profiles),
+        SimulatedTimer(profiles, seed=0),
+        m_per_iteration=3,
+        eps=-1.0,
+        max_measurements=budget,
+        vectorized=vectorized,
+    )
+
+
+def _analysis_us_per_iter(
+    profiles: Dict[str, NoiseProfile], vectorized: bool, iterations: int
+) -> Tuple[float, MeasurementSession]:
+    session = _session(profiles, vectorized)
+    for _ in range(iterations):
+        session.step()
+    secs = session.analysis_seconds
+    return sum(secs) / len(secs) * 1e6, session
+
+
+def run(smoke: bool, out: List[str], ctx=None) -> None:
+    #                 p, legacy iterations, vectorized iterations
+    plan = [(30, 3, 3)] if smoke else [(30, 3, 3), (120, 2, 2), (429, 1, 1)]
+
+    for p, legacy_iters, fast_iters in plan:
+        profiles = _chain_profiles(p)
+        legacy_us, legacy_session = _analysis_us_per_iter(
+            profiles, vectorized=False, iterations=legacy_iters
+        )
+        fast_us, fast_session = _analysis_us_per_iter(
+            profiles, vectorized=True, iterations=fast_iters
+        )
+        # same seed + golden-equal analysis => identical iteration records
+        common = min(legacy_iters, fast_iters)
+        if fast_session.history[:common] != legacy_session.history[:common]:
+            raise AssertionError(f"fast/legacy analysis diverged at p={p}")
+        out.append(
+            f"rank_scaling.p{p}.legacy_analysis,{legacy_us:.0f},"
+            f"pairwise percentiles; {legacy_iters} iters timed"
+        )
+        out.append(
+            f"rank_scaling.p{p}.vectorized_analysis,{fast_us:.0f},"
+            f"batched QuantileTable; speedup=x{legacy_us / max(fast_us, 1e-9):.1f}"
+        )
+
+    if not smoke:
+        # The previously-impractical workload: rank all 429 trees of the
+        # n=8 chain to convergence on the vectorized path.
+        profiles = _chain_profiles(429)
+        session = MeasurementSession(
+            "rank_scaling_full",
+            sorted(profiles),
+            SimulatedTimer(profiles, seed=0),
+            m_per_iteration=3,
+            eps=0.03,
+            max_measurements=30,
+            vectorized=True,
+        )
+        t0 = time.time()
+        while not session.done:
+            session.step()
+        res = session.result()
+        analysis_s = sum(session.analysis_seconds)
+        out.append(
+            f"rank_scaling.p429.full_campaign,{(time.time() - t0) * 1e6:.0f},"
+            f"n=8 chain ranked to N={res.measurements_per_alg} in "
+            f"{session.iterations} iters converged={res.converged} "
+            f"classes={max(res.ranks.values())} analysis_total={analysis_s:.2f}s"
+        )

@@ -2,10 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
                                             [--state-dir DIR] [--resume]
+                                            [--json PATH]
 
 Output: ``name,us_per_call,derived`` CSV lines (one per measured table row).
 ``--smoke`` runs reduced instance sizes (CI); the default reproduces the
-paper-scale instances (minutes on one CPU core).
+paper-scale instances (minutes on one CPU core). ``--json PATH``
+additionally writes the rows machine-readably (schema below), so the repo
+can accumulate ``BENCH_*.json`` trajectory files across PRs:
+
+    {"schema": 1, "smoke": ..., "argv": [...], "total_seconds": ...,
+     "modules": {"name": {"seconds": ..., "error": null | "..."}},
+     "rows": [{"name": ..., "us_per_call": ..., "derived": ...}, ...]}
 
 Measurement loops run as ExperimentEngine campaigns. With ``--state-dir``
 each campaign persists its sessions (measurement stores, iteration history,
@@ -22,13 +29,16 @@ Modules:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
-from typing import List
+from typing import Any, Dict, List
 
 from . import (
     bench_large_chain,
     bench_paper_tables,
+    bench_rank_scaling,
     bench_roofline,
     bench_turbo,
     bench_variant_sites,
@@ -40,8 +50,21 @@ MODULES = {
     "turbo": bench_turbo.run,
     "variants": bench_variant_sites.run,
     "large_chain": bench_large_chain.run,
+    "rank_scaling": bench_rank_scaling.run,
     "roofline": bench_roofline.run,
 }
+
+
+def _row_dict(line: str) -> Dict[str, Any]:
+    """Parse a ``name,us_per_call,derived`` row (derived may hold commas;
+    short rows are padded so one malformed line cannot lose the artifact)."""
+    parts = line.split(",", 2) + ["", ""]
+    name, us, derived = parts[0], parts[1], parts[2]
+    try:
+        us_val: Any = float(us)
+    except ValueError:
+        us_val = us
+    return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
 def main() -> None:
@@ -52,27 +75,51 @@ def main() -> None:
                    help="persist engine campaigns to DIR/<name>.json")
     p.add_argument("--resume", action="store_true",
                    help="resume persisted campaigns from --state-dir")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write machine-readable results to PATH")
     args = p.parse_args()
     if args.resume and not args.state_dir:
         p.error("--resume requires --state-dir")
     ctx = BenchContext(state_dir=args.state_dir, resume=args.resume)
 
     out: List[str] = []
+    modules: Dict[str, Dict[str, Any]] = {}
     t_all = time.time()
     names = [args.only] if args.only else list(MODULES)
     for name in names:
         t0 = time.time()
         print(f"# running {name} ...", file=sys.stderr, flush=True)
+        error = None
         try:
             MODULES[name](args.smoke, out, ctx)
         except Exception as e:  # keep the harness going; record the failure
-            out.append(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            error = f"{type(e).__name__}: {e}"
+            out.append(f"{name}.ERROR,0,{error}")
+        modules[name] = {"seconds": round(time.time() - t0, 3), "error": error}
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
 
     print("name,us_per_call,derived")
     for line in out:
         print(line)
-    print(f"# total {time.time()-t_all:.1f}s", file=sys.stderr)
+    total_s = time.time() - t_all
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "schema": 1,
+            "smoke": args.smoke,
+            "argv": sys.argv[1:],
+            "total_seconds": round(total_s, 3),
+            "modules": modules,
+            "rows": [_row_dict(line) for line in out],
+        }
+        parent = os.path.dirname(os.path.abspath(args.json))
+        os.makedirs(parent, exist_ok=True)
+        tmp = args.json + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        os.replace(tmp, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

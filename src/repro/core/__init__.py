@@ -6,7 +6,12 @@ a discriminant. Backend-agnostic: measurements may come from wall-clock
 timing, simulation, or a compiled-artifact cost model.
 """
 
-from .comparison import compare_measurements, compare_range, quantile_window
+from .comparison import (
+    QuantileTable,
+    compare_measurements,
+    compare_range,
+    quantile_window,
+)
 from .convergence import (
     convergence_norm,
     first_differences,
@@ -29,9 +34,11 @@ from .measure import (
 from .session import MeasurementSession
 from .ranking import (
     make_measurement_comparator,
+    make_table_comparator,
     ranks_as_dict,
     sort_algorithms,
     sort_by_measurements,
+    sort_by_table,
 )
 from .scores import (
     CandidateSet,
@@ -70,6 +77,7 @@ __all__ = [
     "Outcome",
     "POLICIES",
     "QuantileRange",
+    "QuantileTable",
     "RankedAlgorithm",
     "RankingResult",
     "REPORT_QUANTILE_RANGE",
@@ -85,6 +93,7 @@ __all__ = [
     "initial_hypothesis_by_flops",
     "initial_hypothesis_by_time",
     "make_measurement_comparator",
+    "make_table_comparator",
     "mean_ranks",
     "measure_and_rank",
     "min_flops_set",
@@ -94,6 +103,7 @@ __all__ = [
     "relative_times",
     "sort_algorithms",
     "sort_by_measurements",
+    "sort_by_table",
     "timer_from_dict",
     "timer_to_dict",
 ]

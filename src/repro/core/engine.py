@@ -19,6 +19,12 @@ history, convergence state and (for simulated / cost-model backends) timer
 RNG state — a killed campaign resumes bit-identical to an uninterrupted
 run. Wall-clock campaigns resume by re-attaching workloads via the
 ``timers=``/``workloads=`` arguments of :meth:`ExperimentEngine.load`.
+
+Each session carries its own batched quantile table across the campaign
+(see :class:`~repro.core.comparison.QuantileTable`): interleaving does not
+discard analysis work, because the table keys on the session store's
+version counter and only the stepped session's store mutates. Per-iteration
+analysis cost is visible on each session's ``analysis_seconds``.
 """
 
 from __future__ import annotations
@@ -192,6 +198,7 @@ class ExperimentEngine:
         d: Mapping[str, Any],
         timers: Optional[Mapping[str, Timer]] = None,
         workloads: Optional[Mapping[str, Mapping[str, Callable[[], object]]]] = None,
+        vectorized: bool = True,
     ) -> "ExperimentEngine":
         engine = cls(policy=d["policy"], deadline_s=d.get("deadline_s"))
         engine.steps_taken = int(d.get("steps_taken", 0))
@@ -202,7 +209,10 @@ class ExperimentEngine:
             name = sd["name"]
             engine.add_session(
                 MeasurementSession.from_dict(
-                    sd, timer=timers.get(name), workloads=workloads.get(name)
+                    sd,
+                    timer=timers.get(name),
+                    workloads=workloads.get(name),
+                    vectorized=vectorized,
                 )
             )
         return engine
@@ -213,10 +223,15 @@ class ExperimentEngine:
         path: str,
         timers: Optional[Mapping[str, Timer]] = None,
         workloads: Optional[Mapping[str, Mapping[str, Callable[[], object]]]] = None,
+        vectorized: bool = True,
     ) -> "ExperimentEngine":
         """Resume a campaign. ``timers`` maps session name -> Timer for
         backends that do not serialize (wall-clock); ``workloads`` maps
-        session name -> {algorithm: thunk} as a convenience for the same."""
+        session name -> {algorithm: thunk} as a convenience for the same.
+        ``vectorized`` picks the analysis path for the resumed sessions —
+        a process choice, not campaign state; both settings resume any
+        saved campaign bit-identically."""
         with open(path) as fh:
             d = json.load(fh)
-        return cls.from_dict(d, timers=timers, workloads=workloads)
+        return cls.from_dict(d, timers=timers, workloads=workloads,
+                             vectorized=vectorized)

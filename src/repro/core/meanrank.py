@@ -12,9 +12,10 @@ ranks; the mean rank quantifies relative shifts that the single
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from .ranking import sort_by_measurements
+from .comparison import QuantileTable
+from .ranking import sort_by_measurements, sort_by_table
 from .types import (
     DEFAULT_QUANTILE_RANGES,
     REPORT_QUANTILE_RANGE,
@@ -29,7 +30,9 @@ class MeanRankResult:
     order: List[str]                 # sequence from the reporting range, best-first
     ranks: List[int]                 # performance classes at the reporting range
     mean_ranks: Dict[str, float]     # mr' per algorithm
-    per_range: Dict[QuantileRange, Dict[str, int]]  # full Table-III style data
+    # Full Table-III style data; always includes report_range (averaged only
+    # when it is a ladder member).
+    per_range: Dict[QuantileRange, Dict[str, int]]
 
     def ordered_mean_ranks(self) -> List[float]:
         """Mean ranks sorted ascending — the ``x`` vector of Procedure 4."""
@@ -43,45 +46,68 @@ class MeanRankResult:
 
 def mean_ranks(
     order: Sequence[str],
-    measurements: Mapping[str, Sequence[float]],
+    measurements: Optional[Mapping[str, Sequence[float]]],
     quantile_ranges: Sequence[QuantileRange] = DEFAULT_QUANTILE_RANGES,
     report_range: QuantileRange = REPORT_QUANTILE_RANGE,
     tie_break: str = "class",
+    *,
+    table: Optional[QuantileTable] = None,
+    memoize: bool = True,
 ) -> MeanRankResult:
     """Procedure 3.
 
     Runs Procedure 2 once per quantile range (always from the same initial
     hypothesis ``order``, as in the paper), accumulates per-algorithm ranks,
     and reports the sequence at ``report_range`` together with the mean rank
-    of every algorithm.
+    of every algorithm. When ``report_range`` is a member of
+    ``quantile_ranges`` its Procedure-2 sort is computed once and reused for
+    the report; otherwise the report range is evaluated additionally — shown
+    in ``per_range`` but not averaged — so callers may e.g. use the
+    left-tail ladder for means while still reporting at the IQR.
 
-    If ``report_range`` is not a member of ``quantile_ranges`` it is evaluated
-    additionally (but not averaged), so callers may e.g. use the left-tail
-    ladder for means while still reporting at the IQR.
+    Comparison backends (identical results, different cost):
+
+    * ``table`` — a :class:`~repro.core.comparison.QuantileTable`; every
+      window of the whole ladder comes from one batched ``np.percentile``
+      pass, and each pairwise comparison is two float reads. ``measurements``
+      may then be ``None``; the table must cover every bound of
+      ``quantile_ranges`` and ``report_range``.
+    * ``measurements`` — the paper-literal pairwise path; quantile windows
+      are recomputed from raw vectors per comparison (``memoize=False``
+      reproduces the historical O(p²·R) percentile cost exactly).
     """
+    if table is not None:
+        def sorter(qrange: QuantileRange) -> Tuple[List[str], List[int]]:
+            return sort_by_table(order, table, qrange, tie_break)
+    elif measurements is not None:
+        def sorter(qrange: QuantileRange) -> Tuple[List[str], List[int]]:
+            return sort_by_measurements(
+                order, measurements, qrange, tie_break, memoize
+            )
+    else:
+        raise ValueError("mean_ranks needs either measurements or table")
+
     per_range: Dict[QuantileRange, Dict[str, int]] = {}
     totals: Dict[str, float] = {name: 0.0 for name in order}
 
     for qrange in quantile_ranges:
-        names, ranks = sort_by_measurements(order, measurements, qrange, tie_break)
-        table = dict(zip(names, ranks))
-        per_range[qrange] = table
+        names, ranks = sorter(qrange)
+        rank_table = dict(zip(names, ranks))
+        per_range[qrange] = rank_table
         for name in order:
-            totals[name] += table[name]
+            totals[name] += rank_table[name]
 
     n_ranges = len(quantile_ranges)
     mr = {name: totals[name] / n_ranges for name in order}
 
     if report_range in per_range:
-        # Re-derive the order at the reporting range.
-        rep_names, rep_ranks = sort_by_measurements(
-            order, measurements, report_range, tie_break
-        )
+        # Reuse the report range's already-computed sort: dicts preserve the
+        # best-first insertion order, so the sequence reconstructs exactly.
+        rank_table = per_range[report_range]
+        rep_names, rep_ranks = list(rank_table), list(rank_table.values())
     else:
-        rep_names, rep_ranks = sort_by_measurements(
-            order, measurements, report_range, tie_break
-        )
-        per_range = dict(per_range)  # report range shown but not averaged
+        rep_names, rep_ranks = sorter(report_range)
+        per_range[report_range] = dict(zip(rep_names, rep_ranks))
 
     return MeanRankResult(
         order=rep_names,

@@ -39,24 +39,72 @@ def rng_from_state(state: Mapping[str, Any]) -> np.random.Generator:
 
 
 class MeasurementStore:
-    """Accumulates measurements per algorithm (the growing ``t_i`` sets)."""
+    """Accumulates measurements per algorithm (the growing ``t_i`` sets).
+
+    Columnar: each algorithm's measurements live in a growing ``float64``
+    numpy buffer (amortized-doubling append), so the analysis layer
+    (:class:`repro.core.comparison.QuantileTable`) can hand whole rows to one
+    batched ``np.percentile`` call instead of re-materialising Python lists
+    per pairwise comparison. A monotonically increasing :attr:`version`
+    counter bumps on every mutation; quantile caches key on it.
+
+    The public value types are unchanged — :meth:`get` / :meth:`as_mapping` /
+    :meth:`to_dict` still speak ``List[float]`` (the same IEEE doubles, so
+    serialized campaign state is byte-identical to the pre-columnar store).
+    """
 
     def __init__(self) -> None:
-        self._data: Dict[str, List[float]] = {}
+        self._buf: Dict[str, np.ndarray] = {}
+        self._len: Dict[str, int] = {}
+        self._version = 0
+
+    @property
+    def version(self) -> int:
+        """Mutation counter — bumps on add/shuffle; cache-invalidation key."""
+        return self._version
 
     def add(self, name: str, values: Sequence[float]) -> None:
-        self._data.setdefault(name, []).extend(float(v) for v in values)
+        vals = np.asarray([float(v) for v in values], dtype=np.float64)
+        if name not in self._buf:
+            self._buf[name] = np.empty(max(8, vals.size), dtype=np.float64)
+            self._len[name] = 0
+        n, buf = self._len[name], self._buf[name]
+        if n + vals.size > buf.size:
+            grown = np.empty(max(buf.size * 2, n + vals.size), dtype=np.float64)
+            grown[:n] = buf[:n]
+            self._buf[name] = buf = grown
+        buf[n : n + vals.size] = vals
+        self._len[name] = n + vals.size
+        self._version += 1
+
+    def row(self, name: str) -> np.ndarray:
+        """Read-only view of an algorithm's measurements (no copy).
+
+        Read-only is enforced: writes must go through :meth:`add` /
+        :meth:`shuffle` so the version counter keeps quantile caches honest.
+        """
+        view = self._buf[name][: self._len[name]]
+        view.setflags(write=False)
+        return view
+
+    def count(self, name: str) -> int:
+        return self._len.get(name, 0)
+
+    def names(self) -> List[str]:
+        return list(self._buf)
 
     def get(self, name: str) -> List[float]:
-        return self._data.get(name, [])
+        if name not in self._buf:
+            return []
+        return self.row(name).tolist()
 
     def counts(self) -> Dict[str, int]:
-        return {k: len(v) for k, v in self._data.items()}
+        return dict(self._len)
 
     def min_count(self) -> int:
-        if not self._data:
+        if not self._len:
             return 0
-        return min(len(v) for v in self._data.values())
+        return min(self._len.values())
 
     def shuffle(self, rng: np.random.Generator) -> None:
         """Shuffle each algorithm's measurements in place.
@@ -65,20 +113,28 @@ class MeasurementStore:
         that frequency-mode clusters mix fairly across algorithms
         (Sec. IV, "Effect of Turbo boost"). Quantiles are order-independent,
         but downstream consumers that subsample rely on this.
+
+        Vectorized: one ``rng.permutation`` per row applied by fancy
+        indexing — the RNG call sequence (and therefore every resumed
+        campaign) is identical to the historical per-element reorder.
         """
-        for v in self._data.values():
-            perm = rng.permutation(len(v))
-            v[:] = [v[i] for i in perm]
+        for name, buf in self._buf.items():
+            row = buf[: self._len[name]]
+            perm = rng.permutation(len(row))
+            row[:] = row[perm]
+        self._version += 1
 
     def as_mapping(self) -> Mapping[str, List[float]]:
-        return self._data
+        """Legacy list-of-floats view (built on demand; the fast path reads
+        :meth:`rows` / :meth:`row` instead)."""
+        return {name: self.row(name).tolist() for name in self._buf}
 
     def __contains__(self, name: str) -> bool:
-        return name in self._data
+        return name in self._buf
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-serializable snapshot (engine persistence, reanalysis)."""
-        return {"measurements": {k: list(v) for k, v in self._data.items()}}
+        return {"measurements": {k: self.row(k).tolist() for k in self._buf}}
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "MeasurementStore":
@@ -154,6 +210,16 @@ class NoiseProfile:
 
 
 class SimulatedTimer(Timer):
+    """Samples are drawn in vectorized batches: :meth:`measure_many` makes
+    one RNG call per distribution component (``m`` lognormal factors, then
+    ``m`` bimodal coin flips, then ``m`` outlier coin flips) instead of
+    interleaving three scalar draws per sample. For a given RNG state a
+    batch of ``m`` is one transaction — ``snapshot()``/``restore()`` around
+    it keeps interrupted campaigns bit-identical on resume. A pure-lognormal
+    profile consumes exactly the stream the historical scalar loop did;
+    bimodal/outlier profiles consume the same *number* of draws in batched
+    order."""
+
     def __init__(
         self,
         profiles: Mapping[str, NoiseProfile],
@@ -163,13 +229,18 @@ class SimulatedTimer(Timer):
         self._rng = np.random.default_rng(seed)
 
     def measure(self, name: str) -> float:
+        return self.measure_many(name, 1)[0]
+
+    def measure_many(self, name: str, m: int) -> List[float]:
         p = self._profiles[name]
-        t = p.base * float(np.exp(self._rng.normal(0.0, p.rel_sigma)))
-        if p.bimodal_prob > 0.0 and self._rng.random() < p.bimodal_prob:
-            t *= 1.0 + p.bimodal_shift
-        if p.outlier_prob > 0.0 and self._rng.random() < p.outlier_prob:
-            t *= p.outlier_scale
-        return t
+        t = p.base * np.exp(self._rng.normal(0.0, p.rel_sigma, m))
+        if p.bimodal_prob > 0.0:
+            mask = self._rng.random(m) < p.bimodal_prob
+            t = np.where(mask, t * (1.0 + p.bimodal_shift), t)
+        if p.outlier_prob > 0.0:
+            mask = self._rng.random(m) < p.outlier_prob
+            t = np.where(mask, t * p.outlier_scale, t)
+        return t.tolist()
 
     def snapshot(self) -> Any:
         return rng_state(self._rng)
@@ -199,10 +270,15 @@ class CostModelTimer(Timer):
         self._rng = np.random.default_rng(seed)
 
     def measure(self, name: str) -> float:
-        t = self._costs[name]
+        return self.measure_many(name, 1)[0]
+
+    def measure_many(self, name: str, m: int) -> List[float]:
+        """One batched RNG draw for the whole sample block (the noiseless
+        model touches no RNG at all, exactly like the scalar path)."""
+        t = float(self._costs[name])
         if self._rel_sigma > 0.0:
-            t *= float(np.exp(self._rng.normal(0.0, self._rel_sigma)))
-        return t
+            return (t * np.exp(self._rng.normal(0.0, self._rel_sigma, m))).tolist()
+        return [t] * m
 
     def snapshot(self) -> Any:
         return rng_state(self._rng)

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Mapping, Sequence, Tuple
 
-from .comparison import compare_measurements
+from .comparison import QuantileTable, compare_measurements
 from .types import Outcome, QuantileRange
 
 # Comparator signature: (name_i, name_j) -> Outcome
@@ -43,7 +43,8 @@ def make_measurement_comparator(
     measurements: Mapping[str, Sequence[float]],
     qrange: QuantileRange,
 ) -> Comparator:
-    """Build a Procedure-1 comparator over a measurement table."""
+    """Build a Procedure-1 comparator over a measurement table (recomputes
+    both quantile windows from raw vectors per call — the legacy path)."""
 
     def cmp(name_i: str, name_j: str) -> Outcome:
         return compare_measurements(
@@ -53,10 +54,26 @@ def make_measurement_comparator(
     return cmp
 
 
+def make_table_comparator(
+    table: QuantileTable,
+    qrange: QuantileRange,
+) -> Comparator:
+    """Build a Procedure-1 comparator over a pre-batched
+    :class:`~repro.core.comparison.QuantileTable` — each comparison is two
+    float reads instead of four ``np.percentile`` computations."""
+    q_lower, q_upper = float(qrange[0]), float(qrange[1])
+
+    def cmp(name_i: str, name_j: str) -> Outcome:
+        return table.compare(name_i, name_j, q_lower, q_upper)
+
+    return cmp
+
+
 def sort_algorithms(
     order: Sequence[str],
     comparator: Comparator,
     tie_break: str = "class",
+    memoize: bool = True,
 ) -> Tuple[List[str], List[int]]:
     """Procedure 2: bubble sort with the three-way comparison.
 
@@ -70,6 +87,12 @@ def sort_algorithms(
     tie_break:
         ``"class"`` (default, figure-consistent) or ``"literal"`` (pseudocode
         rule) — see module docstring.
+    memoize:
+        Cache comparison outcomes per (a, b) pair for the duration of this
+        sort. Bubble-sort passes re-compare identical pairs whose underlying
+        data cannot have changed mid-sort, so for a deterministic comparator
+        (any measurement- or table-backed one) memoization changes nothing
+        but the cost. Disable only for stateful comparators.
 
     Returns
     -------
@@ -84,6 +107,17 @@ def sort_algorithms(
     ranks: List[int] = list(range(1, p + 1))
     if p <= 1:
         return names, ranks[:p]
+
+    if memoize:
+        raw = comparator
+        seen: Dict[Tuple[str, str], Outcome] = {}
+
+        def comparator(a: str, b: str) -> Outcome:  # noqa: F811
+            key = (a, b)
+            out = seen.get(key)
+            if out is None:
+                out = seen[key] = raw(a, b)
+            return out
 
     for k in range(p):
         for j in range(p - k - 1):
@@ -117,11 +151,22 @@ def sort_by_measurements(
     measurements: Mapping[str, Sequence[float]],
     qrange: QuantileRange,
     tie_break: str = "class",
+    memoize: bool = True,
 ) -> Tuple[List[str], List[int]]:
     """Procedure 2 specialised to a measurement table + quantile range."""
     return sort_algorithms(
-        order, make_measurement_comparator(measurements, qrange), tie_break
+        order, make_measurement_comparator(measurements, qrange), tie_break, memoize
     )
+
+
+def sort_by_table(
+    order: Sequence[str],
+    table: QuantileTable,
+    qrange: QuantileRange,
+    tie_break: str = "class",
+) -> Tuple[List[str], List[int]]:
+    """Procedure 2 specialised to a batched quantile table (the fast path)."""
+    return sort_algorithms(order, make_table_comparator(table, qrange), tie_break)
 
 
 def ranks_as_dict(names: Sequence[str], ranks: Sequence[int]) -> Dict[str, int]:

@@ -25,11 +25,13 @@ sessions as one campaign.
 from __future__ import annotations
 
 import math
+import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
-from .meanrank import mean_ranks
+from .comparison import QuantileTable
+from .meanrank import MeanRankResult, mean_ranks
 from .measure import (
     MeasurementStore,
     Timer,
@@ -95,6 +97,15 @@ class MeasurementSession:
     iteration and resumed bit-identically (timer RNG state included for
     simulated/cost-model backends).
 
+    Analysis runs vectorized by default: the session holds one
+    :class:`~repro.core.comparison.QuantileTable` over its columnar store
+    (all ladder bounds + the reporting range, batched into a single
+    ``np.percentile`` pass per iteration, invalidated by store version), so
+    a whole Procedure-4 step does O(p·R) percentile work instead of
+    O(p²·R). ``vectorized=False`` keeps the paper-literal pairwise
+    evaluation; both paths produce identical results and identical
+    serialized state (golden-equality tested).
+
     ``meta`` is a JSON-serializable scratch dict for campaign owners (the
     autotuner stores FLOP tables and single-run times there).
     """
@@ -114,6 +125,7 @@ class MeasurementSession:
         store: Optional[MeasurementStore] = None,
         shuffle_seed: Optional[int] = 0,
         meta: Optional[Dict[str, Any]] = None,
+        vectorized: bool = True,
     ) -> None:
         order = list(initial_order)
         if not order:
@@ -143,6 +155,13 @@ class MeasurementSession:
         self._converged = False
         self._history: List[IterationRecord] = []
         self._fallback: Optional[IterationRecord] = None
+        # Analysis fast path: one QuantileTable held across the session's
+        # whole lifetime, recomputed lazily when the store version moves.
+        # Deliberately NOT serialized — the vectorized and legacy paths
+        # produce identical state, so persisted JSON stays byte-equal.
+        self._vectorized = vectorized
+        self._qtable: Optional[QuantileTable] = None
+        self._analysis_seconds: List[float] = []
 
     # ------------------------------------------------------------ state ---
 
@@ -190,6 +209,61 @@ class MeasurementSession:
         session whose timer was not serializable, e.g. wall-clock)."""
         self._timer = timer
 
+    @property
+    def vectorized(self) -> bool:
+        """True when analysis runs through the batched quantile table."""
+        return self._vectorized
+
+    @property
+    def analysis_seconds(self) -> List[float]:
+        """Wall seconds the *analysis* (Procedure 3 over the ladder) took in
+        each iteration run by this process — the quantity
+        ``benchmarks/bench_rank_scaling.py`` sweeps. Not serialized: timings
+        are an artifact of this host, not campaign state."""
+        return list(self._analysis_seconds)
+
+    # --------------------------------------------------------- analysis ---
+
+    def _table(self) -> QuantileTable:
+        """The session's quantile table: every bound of the ladder plus the
+        reporting range, cached across steps, invalidated by store version."""
+        if self._qtable is None:
+            self._qtable = QuantileTable.from_ranges(
+                self._store, (*self.quantile_ranges, self.report_range)
+            )
+        return self._qtable
+
+    def _mean_ranks(self) -> MeanRankResult:
+        """One Procedure-3 pass over the current store, timed.
+
+        The vectorized path (default) flows the batched quantile table
+        through every Procedure-2 sort of the ladder; ``vectorized=False``
+        reproduces the historical pairwise evaluation (unmemoized, one
+        ``np.percentile`` pair per comparison) bit-for-bit — the golden
+        tests hold the two paths equal.
+        """
+        t0 = time.perf_counter()
+        if self._vectorized:
+            mr = mean_ranks(
+                self._order,
+                None,
+                quantile_ranges=self.quantile_ranges,
+                report_range=self.report_range,
+                tie_break=self.tie_break,
+                table=self._table(),
+            )
+        else:
+            mr = mean_ranks(
+                self._order,
+                self._store.as_mapping(),
+                quantile_ranges=self.quantile_ranges,
+                report_range=self.report_range,
+                tie_break=self.tie_break,
+                memoize=False,
+            )
+        self._analysis_seconds.append(time.perf_counter() - t0)
+        return mr
+
     # ------------------------------------------------------------- loop ---
 
     def step(self) -> Optional[IterationRecord]:
@@ -217,13 +291,7 @@ class MeasurementSession:
         if self._shuffle_rng is not None:
             self._store.shuffle(self._shuffle_rng)
 
-        mr = mean_ranks(
-            self._order,
-            self._store.as_mapping(),
-            quantile_ranges=self.quantile_ranges,
-            report_range=self.report_range,
-            tie_break=self.tie_break,
-        )
+        mr = self._mean_ranks()
         x = np.asarray(mr.ordered_mean_ranks(), dtype=np.float64)
         dx = first_differences(x)
         self._norm = convergence_norm(dx, self._dy, self._p)
@@ -259,13 +327,7 @@ class MeasurementSession:
             self._store.add(
                 name, self._timer.measure_many(name, max(1, self.m_per_iteration))
             )
-        mr = mean_ranks(
-            self._order,
-            self._store.as_mapping(),
-            quantile_ranges=self.quantile_ranges,
-            report_range=self.report_range,
-            tie_break=self.tie_break,
-        )
+        mr = self._mean_ranks()
         rec = IterationRecord(
             measurements_per_alg=self._store.min_count(),
             order=tuple(mr.order),
@@ -350,16 +412,21 @@ class MeasurementSession:
         d: Mapping[str, Any],
         timer: Optional[Timer] = None,
         workloads: Optional[Mapping[str, Any]] = None,
+        vectorized: bool = True,
     ) -> "MeasurementSession":
         """Rebuild a session. ``timer`` overrides the serialized backend;
         wall-clock backends need ``workloads`` (or a later
-        :meth:`attach_timer`) before the next ``step()``."""
+        :meth:`attach_timer`) before the next ``step()``. ``vectorized`` is
+        an analysis-path choice of the *process*, not campaign state — it is
+        never serialized, and either setting resumes any saved session
+        bit-identically."""
         if timer is None:
             timer = timer_from_dict(d.get("timer") or {"kind": "opaque"}, workloads)
         session = cls(
             d["name"],
             d["initial_order"],
             timer,
+            vectorized=vectorized,
             m_per_iteration=int(d["m_per_iteration"]),
             eps=float(d["eps"]),
             max_measurements=int(d["max_measurements"]),

@@ -71,21 +71,24 @@ def test_session_json_roundtrip_resumes_bit_identical():
 
 def test_interrupt_mid_step_rolls_back_and_resumes_bit_identical():
     """An interrupt inside step()'s measurement loop must not persist a
-    partial batch or a shifted timer RNG stream: a save taken after the
+    partial iteration or a shifted timer RNG stream: a save taken after the
     exception sits at a whole-iteration boundary, so resume still matches
-    the uninterrupted run exactly."""
+    the uninterrupted run exactly. With batched draws the interruptible
+    points are between per-algorithm sample blocks — the iteration is
+    already mid-flight (some algorithms measured) when the interrupt
+    lands."""
 
     class Interrupting(SimulatedTimer):
         def __init__(self, *a, **k):
             super().__init__(*a, **k)
-            self.calls = 0
+            self.batches = 0
             self.explode_at = None
 
-        def measure(self, name):
-            self.calls += 1
-            if self.explode_at is not None and self.calls >= self.explode_at:
+        def measure_many(self, name, m):
+            self.batches += 1
+            if self.explode_at is not None and self.batches >= self.explode_at:
                 raise KeyboardInterrupt
-            return super().measure(name)
+            return super().measure_many(name, m)
 
     ref = measure_and_rank(
         sorted(BASES), _timer(), m_per_iteration=3, eps=0.02, max_measurements=36
@@ -95,10 +98,10 @@ def test_interrupt_mid_step_rolls_back_and_resumes_bit_identical():
         "s", sorted(BASES), timer, m_per_iteration=3, eps=0.02, max_measurements=36
     )
     session.step()
-    timer.explode_at = timer.calls + 5  # mid-batch of the second iteration
+    timer.explode_at = timer.batches + 2  # mid-iteration: 1 of 4 algs drawn
     with pytest.raises(KeyboardInterrupt):
         session.step()
-    assert session.measurements_per_alg == 3  # partial batch rolled back
+    assert session.measurements_per_alg == 3  # partial iteration rolled back
     timer.explode_at = None
 
     blob = json.dumps(session.to_dict())
@@ -131,6 +134,50 @@ def test_detached_session_ranks_existing_data_but_cannot_measure():
 
 
 # ---------------------------------------------------------- store / timer ---
+
+def test_batched_draw_campaign_resumes_bit_identical():
+    """Satellite regression: with vectorized measure_many (one RNG call per
+    distribution component, non-trivial accounting for bimodal + outlier
+    profiles), a killed-and-resumed campaign must still be bit-identical to
+    an uninterrupted one."""
+    profiles = {
+        "a": NoiseProfile(base=1.0, rel_sigma=0.03, bimodal_shift=1.0,
+                          bimodal_prob=0.5, outlier_prob=0.05),
+        "b": NoiseProfile(base=1.1, rel_sigma=0.03, bimodal_shift=0.6,
+                          bimodal_prob=0.5),
+        "c": NoiseProfile(base=1.6, rel_sigma=0.03),
+    }
+
+    def make():
+        return MeasurementSession(
+            "s", sorted(profiles), SimulatedTimer(profiles, seed=21),
+            m_per_iteration=4, eps=0.01, max_measurements=24,
+        )
+
+    full = make()
+    while not full.done:
+        full.step()
+
+    killed = make()
+    killed.step()
+    resumed = MeasurementSession.from_dict(json.loads(json.dumps(killed.to_dict())))
+    while not resumed.done:
+        resumed.step()
+
+    assert resumed.result() == full.result()
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(full.to_dict(), sort_keys=True)
+
+
+def test_batched_draws_match_scalar_loop_for_lognormal_profiles():
+    """A pure-lognormal profile must consume exactly the RNG stream the
+    historical scalar loop did: measure_many(m) == m successive measure()
+    calls, and the stream continues identically afterwards."""
+    t1 = SimulatedTimer(_profiles(BASES), seed=9)
+    t2 = SimulatedTimer(_profiles(BASES), seed=9)
+    assert t1.measure_many("a", 10) == [t2.measure("a") for _ in range(10)]
+    assert t1.measure("b") == t2.measure("b")
+
 
 def test_measurement_store_json_roundtrip():
     store = MeasurementStore()

@@ -1,0 +1,179 @@
+"""QuantileTable: batched quantile windows vs the pairwise Procedure-1 path.
+
+The vectorized analysis core is only admissible because it is *bit-identical*
+to the paper-literal implementation; these tests pin that down at the
+window/comparison level (the session/campaign level lives in
+test_vectorized_golden.py). Property-based variants use hypothesis through
+the compat shim, so the example-based edge cases still run on bare envs.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import (
+    DEFAULT_QUANTILE_RANGES,
+    MeasurementStore,
+    Outcome,
+    QuantileTable,
+    compare_measurements,
+    quantile_window,
+)
+
+LADDER = DEFAULT_QUANTILE_RANGES + ((2.5, 97.5),)  # one off-ladder range too
+
+
+def _store(table):
+    store = MeasurementStore()
+    for name, values in table.items():
+        store.add(name, values)
+    return store
+
+
+# ------------------------------------------------------------ properties ---
+
+@given(
+    st.dictionaries(
+        st.sampled_from([f"alg{i}" for i in range(6)]),
+        st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+        min_size=1,
+        max_size=6,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_table_windows_equal_pairwise_windows(meas):
+    """Property: every (algorithm × range) window from the batched table is
+    bitwise equal to quantile_window on the raw vector — across ragged row
+    lengths (each algorithm's N differs)."""
+    store = _store(meas)
+    table = QuantileTable.from_ranges(store, LADDER)
+    for name, values in meas.items():
+        for lo, hi in LADDER:
+            assert table.window(name, lo, hi) == quantile_window(values, lo, hi)
+
+
+@given(
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=30),
+    st.lists(st.floats(0.1, 10.0), min_size=1, max_size=30),
+)
+@settings(max_examples=60, deadline=None)
+def test_table_compare_equals_compare_measurements(a, b):
+    """Property: the three-way comparison through the table is the same
+    Outcome as the pairwise Procedure 1, for every ladder range."""
+    store = _store({"a": a, "b": b})
+    table = QuantileTable.from_ranges(store, LADDER)
+    for lo, hi in LADDER:
+        assert table.compare("a", "b", lo, hi) is compare_measurements(a, b, lo, hi)
+        assert table.compare("b", "a", lo, hi) is compare_measurements(b, a, lo, hi)
+
+
+@given(
+    st.integers(1, 5),
+    st.floats(0.1, 10.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_table_duplicate_values_collapse_windows(n, value):
+    """Property: a constant measurement vector (duplicates) collapses every
+    window to (value, value), table and pairwise alike."""
+    store = _store({"x": [value] * n})
+    table = QuantileTable.from_ranges(store, LADDER)
+    for lo, hi in LADDER:
+        win = table.window("x", lo, hi)
+        assert win == quantile_window([value] * n, lo, hi)
+        assert win[0] == win[1] == pytest.approx(value)
+
+
+# ------------------------------------------------------------ edge cases ---
+
+def test_single_measurement_window_collapses():
+    """N == 1: both quantiles collapse to the lone value (well-defined, per
+    quantile_window's contract)."""
+    store = _store({"x": [3.25]})
+    table = QuantileTable.from_ranges(store, [(5.0, 95.0), (25.0, 75.0)])
+    assert table.window("x", 25.0, 75.0) == (3.25, 3.25)
+    assert table.window("x", 5.0, 95.0) == (3.25, 3.25)
+
+
+def test_duplicate_heavy_rows_match_pairwise():
+    meas = {"a": [1.0, 1.0, 5.0], "b": [1.0, 1.0, 1.0, 1.0]}
+    store = _store(meas)
+    table = QuantileTable.from_ranges(store, DEFAULT_QUANTILE_RANGES)
+    for lo, hi in DEFAULT_QUANTILE_RANGES:
+        for name in meas:
+            assert table.window(name, lo, hi) == quantile_window(meas[name], lo, hi)
+        assert table.compare("a", "b", lo, hi) is compare_measurements(
+            meas["a"], meas["b"], lo, hi
+        )
+
+
+def test_zero_measurement_algorithm_raises_like_pairwise():
+    store = MeasurementStore()
+    store.add("full", [1.0, 2.0])
+    store.add("empty", [])
+    table = QuantileTable.from_ranges(store, [(25.0, 75.0)])
+    with pytest.raises(ValueError, match="zero measurements"):
+        table.window("empty", 25.0, 75.0)
+    with pytest.raises(ValueError):
+        quantile_window([], 25.0, 75.0)
+
+
+def test_unknown_bound_and_invalid_range_rejected():
+    store = _store({"a": [1.0, 2.0], "b": [3.0, 4.0]})
+    table = QuantileTable(store, [25.0, 75.0])
+    with pytest.raises(KeyError, match="not in table bounds"):
+        table.window("a", 10.0, 90.0)
+    with pytest.raises(ValueError):  # same contract as compare_measurements
+        table.compare("a", "b", 75.0, 25.0)
+    with pytest.raises(ValueError):
+        QuantileTable(store, [0.0, 75.0])
+
+
+def test_table_invalidates_on_store_version_bump():
+    """The cache keys on the store's version counter: appending measurements
+    must refresh the windows; an untouched store must not recompute."""
+    store = _store({"x": [1.0, 1.0, 1.0]})
+    table = QuantileTable.from_ranges(store, [(25.0, 75.0)])
+    assert table.window("x", 25.0, 75.0) == (1.0, 1.0)
+    v0 = store.version
+    store.add("x", [5.0, 5.0, 5.0])
+    assert store.version > v0
+    lo, hi = table.window("x", 25.0, 75.0)
+    assert (lo, hi) == quantile_window(store.get("x"), 25.0, 75.0)
+    assert hi > 1.0
+
+
+def test_shuffle_preserves_windows_and_bumps_version():
+    """Shuffling permutes rows in place (one permutation per row); quantiles
+    are order-independent so the windows cannot move, but the version must
+    bump so dependent caches re-validate."""
+    rng = np.random.default_rng(0)
+    store = _store({"x": list(np.linspace(1.0, 2.0, 17)), "y": [4.0, 3.0, 5.0]})
+    table = QuantileTable.from_ranges(store, DEFAULT_QUANTILE_RANGES)
+    before = {
+        (n, r): table.window(n, *r)
+        for n in ("x", "y")
+        for r in DEFAULT_QUANTILE_RANGES
+    }
+    sorted_rows = {n: sorted(store.get(n)) for n in ("x", "y")}
+    v0 = store.version
+    store.shuffle(rng)
+    assert store.version > v0
+    assert {n: sorted(store.get(n)) for n in ("x", "y")} == sorted_rows
+    for (n, r), win in before.items():
+        assert table.window(n, *r) == win
+
+
+def test_columnar_store_amortized_append_and_views():
+    """Many small appends must land in one growing buffer; row() is a view
+    (no copy) and get()/as_mapping()/to_dict() still speak lists of floats."""
+    store = MeasurementStore()
+    for i in range(100):
+        store.add("x", [float(i)])
+    assert store.count("x") == 100
+    row = store.row("x")
+    assert isinstance(row, np.ndarray) and row.dtype == np.float64
+    assert row.base is not None  # a view into the growing buffer
+    assert store.get("x") == [float(i) for i in range(100)]
+    assert store.to_dict() == {"measurements": {"x": [float(i) for i in range(100)]}}
+    assert dict(store.as_mapping()) == {"x": [float(i) for i in range(100)]}

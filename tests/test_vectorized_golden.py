@@ -1,0 +1,162 @@
+"""Golden equality: the vectorized analysis core vs the legacy pairwise path.
+
+The tentpole contract — the batched QuantileTable path must be
+*bit-identical* to the paper-literal pairwise evaluation: same
+RankingResult (order, ranks, mean ranks, history), same serialized session
+JSON, kill/resume preserved. Sessions differ ONLY in ``vectorized``; both
+see the same timer seed, so any divergence is an analysis-path bug.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FAST_MODE_QUANTILE_RANGES,
+    CostModelTimer,
+    ExperimentEngine,
+    MeasurementSession,
+    NoiseProfile,
+    SimulatedTimer,
+    mean_ranks,
+)
+
+
+def _lognormal_timer(seed=5):
+    profiles = {
+        f"a{i}": NoiseProfile(base=1.0 + 0.04 * i, rel_sigma=0.05)
+        for i in range(6)
+    }
+    return sorted(profiles), SimulatedTimer(profiles, seed=seed)
+
+
+def _bimodal_timer(seed=11):
+    profiles = {
+        "a": NoiseProfile(base=1.0, rel_sigma=0.01, bimodal_shift=1.0,
+                          bimodal_prob=0.5),
+        "b": NoiseProfile(base=1.25, rel_sigma=0.01, bimodal_shift=0.6,
+                          bimodal_prob=0.5),
+        "c": NoiseProfile(base=1.05, rel_sigma=0.01, bimodal_shift=0.9,
+                          bimodal_prob=0.5, outlier_prob=0.05),
+    }
+    return sorted(profiles), SimulatedTimer(profiles, seed=seed)
+
+
+def _costmodel_timer(seed=2):
+    costs = {f"v{i}": 1.0 + 0.1 * (i % 5) + 0.01 * i for i in range(24)}
+    return sorted(costs), CostModelTimer(costs, rel_sigma=0.08, seed=seed)
+
+
+INSTANCES = {
+    "lognormal_p6": (_lognormal_timer, {}),
+    "bimodal_fastmode_p3": (
+        _bimodal_timer,
+        {"quantile_ranges": FAST_MODE_QUANTILE_RANGES,
+         "report_range": (15.0, 45.0)},
+    ),
+    "costmodel_p24": (_costmodel_timer, {"eps": 0.01}),
+}
+
+
+def _run(make, extra, vectorized, steps=None):
+    order, timer = make()
+    kwargs = {"m_per_iteration": 3, "eps": 0.02, "max_measurements": 24, **extra}
+    session = MeasurementSession(
+        "golden", order, timer, vectorized=vectorized, **kwargs,
+    )
+    if steps is None:
+        while not session.done:
+            session.step()
+    else:
+        for _ in range(steps):
+            session.step()
+    return session
+
+
+@pytest.mark.parametrize("instance", sorted(INSTANCES))
+def test_vectorized_path_bit_identical_to_legacy(instance):
+    """Order, ranks, mean ranks, convergence history AND the full serialized
+    session JSON agree between the two analysis paths, per instance."""
+    make, extra = INSTANCES[instance]
+    fast = _run(make, extra, vectorized=True)
+    legacy = _run(make, extra, vectorized=False)
+    assert fast.history == legacy.history
+    assert fast.result() == legacy.result()
+    assert json.dumps(fast.to_dict(), sort_keys=True) == \
+        json.dumps(legacy.to_dict(), sort_keys=True)
+
+
+def test_vectorized_kill_resume_campaign_matches_legacy_uninterrupted():
+    """A vectorized campaign killed mid-flight, persisted through real JSON
+    and resumed must equal the legacy path's uninterrupted run — the
+    acceptance path for 'kill/resume preserved'."""
+    make, extra = INSTANCES["lognormal_p6"]
+    legacy = _run(make, extra, vectorized=False)
+
+    killed = _run(make, extra, vectorized=True, steps=2)
+    blob = json.dumps(killed.to_dict())
+    resumed = MeasurementSession.from_dict(json.loads(blob), vectorized=True)
+    while not resumed.done:
+        resumed.step()
+
+    assert resumed.result() == legacy.result()
+    assert json.dumps(resumed.to_dict(), sort_keys=True) == \
+        json.dumps(legacy.to_dict(), sort_keys=True)
+
+
+def test_engine_campaign_vectorized_vs_legacy_sessions():
+    """Interleaved campaign golden check: the same three sessions stepped by
+    the same scheduler produce identical engine state either way (the table
+    is cached per session across interleaved steps — store versioning must
+    keep it honest)."""
+
+    def build(vectorized):
+        engine = ExperimentEngine(policy="least_converged_first")
+        for name, (make, extra) in sorted(INSTANCES.items()):
+            order, timer = make()
+            kwargs = {"m_per_iteration": 3, "eps": 0.02,
+                      "max_measurements": 18, **extra}
+            engine.add_session(MeasurementSession(
+                name, order, timer, vectorized=vectorized, **kwargs,
+            ))
+        engine.run()
+        return engine
+
+    fast, legacy = build(True), build(False)
+    assert json.dumps(fast.to_dict(), sort_keys=True) == \
+        json.dumps(legacy.to_dict(), sort_keys=True)
+    for name, res in fast.results().items():
+        assert res == legacy.results()[name]
+
+
+def test_mean_ranks_table_path_with_offladder_report_range():
+    """mean_ranks equality when report_range is NOT in the ladder (the
+    re-added per_range entry must exist and agree between paths), plus the
+    reuse fix: the report table IS the ladder entry when it is a member."""
+    from repro.core import MeasurementStore, QuantileTable
+
+    rng = np.random.default_rng(3)
+    meas = {f"m{i}": rng.normal(1.0 + 0.2 * i, 0.1, 15).tolist() for i in range(5)}
+    store = MeasurementStore()
+    for k, v in meas.items():
+        store.add(k, v)
+
+    ladder = ((5.0, 95.0), (25.0, 75.0), (35.0, 65.0))
+    for report in ((25.0, 75.0), (10.0, 90.0)):  # in-ladder and off-ladder
+        table = QuantileTable.from_ranges(store, (*ladder, report))
+        fast = mean_ranks(sorted(meas), None, quantile_ranges=ladder,
+                          report_range=report, table=table)
+        legacy = mean_ranks(sorted(meas), meas, quantile_ranges=ladder,
+                            report_range=report, memoize=False)
+        assert fast.order == legacy.order
+        assert fast.ranks == legacy.ranks
+        assert fast.mean_ranks == legacy.mean_ranks
+        assert fast.per_range == legacy.per_range
+        assert report in fast.per_range  # the docstring's promise, now kept
+        assert dict(zip(fast.order, fast.ranks)) == fast.per_range[report]
+        # means average the ladder only, never the off-ladder report range
+        assert fast.mean_ranks == {
+            n: sum(fast.per_range[q][n] for q in ladder) / len(ladder)
+            for n in meas
+        }
