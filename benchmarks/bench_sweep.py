@@ -1,0 +1,89 @@
+"""DiscriminantSweep throughput — census instances/minute, single- vs
+multi-worker.
+
+The census subsystem exists to make the paper's Sec. IV-V experiment
+(hundreds of instances, one anomaly-rate table) a matter of machine time,
+so the number that matters is instances/minute and how it scales with
+worker processes. This module runs the SAME deterministic cost-model grid
+through ``python -m repro.launch.sweep run`` with 1 worker and with N
+workers (fresh state directories, subprocess workers — the real deployment
+path, jax import cost and all) and reports both throughputs and the
+speedup. The two runs also cross-check the subsystem's determinism: the
+merged censuses must be byte-identical regardless of worker count.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import List
+
+#: Grid flags shared by both runs (cost_model backend: deterministic, no
+#: jax arrays built, so the benchmark measures the subsystem, not BLAS).
+def _grid_flags(smoke: bool) -> List[str]:
+    if smoke:
+        # n=5 chains (tens of ms of analysis each) in enough volume that the
+        # parallelizable work dominates worker startup even at CI scale
+        return [
+            "--chains", "160", "--chain-sizes", "5",
+            "--families", "bilinear", "--sizes", "64", "--per-size", "8",
+            "--shards", "8", "--max-measurements", "18",
+        ]
+    return [
+        "--chains", "320", "--chain-sizes", "5,6",
+        "--families", "gram,distributive,solve,bilinear",
+        "--sizes", "64,128,256", "--per-size", "7",
+        "--shards", "16", "--max-measurements", "30",
+    ]
+
+
+def _run_sweep(out_dir: str, workers: int, smoke: bool) -> float:
+    """One full census run; returns wall seconds (workers included)."""
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    env["PYTHONPATH"] = os.pathsep.join(dict.fromkeys(parts))
+    cmd = [
+        sys.executable, "-m", "repro.launch.sweep", "run",
+        "--out", out_dir, "--workers", str(workers),
+    ] + _grid_flags(smoke)
+    t0 = time.time()
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    elapsed = time.time() - t0
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sweep run failed ({proc.returncode}): {proc.stderr[-500:]}"
+        )
+    return elapsed
+
+
+def run(smoke: bool, out: List[str], ctx=None) -> None:
+    multi = 2 if smoke else 4
+    with tempfile.TemporaryDirectory(prefix="bench_sweep_") as tmp:
+        single_dir = os.path.join(tmp, "w1")
+        multi_dir = os.path.join(tmp, f"w{multi}")
+        t_single = _run_sweep(single_dir, 1, smoke)
+        t_multi = _run_sweep(multi_dir, multi, smoke)
+
+        merged_single = open(os.path.join(single_dir, "merged.jsonl")).read()
+        merged_multi = open(os.path.join(multi_dir, "merged.jsonl")).read()
+        if merged_single != merged_multi:
+            raise AssertionError(
+                "census differs between 1-worker and multi-worker runs"
+            )
+        n = merged_single.count("\n")
+
+    ipm_single = n / t_single * 60.0
+    ipm_multi = n / t_multi * 60.0
+    out.append(
+        f"sweep.1worker,{t_single / n * 1e6:.0f},"
+        f"{n} instances in {t_single:.1f}s = {ipm_single:.0f} instances/min"
+    )
+    out.append(
+        f"sweep.{multi}workers,{t_multi / n * 1e6:.0f},"
+        f"{n} instances in {t_multi:.1f}s = {ipm_multi:.0f} instances/min; "
+        f"speedup=x{t_single / t_multi:.2f}; census byte-identical"
+    )

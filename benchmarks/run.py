@@ -24,6 +24,7 @@ Modules:
   turbo        — Fig. 6/7a turbo-boost (bimodal) study, simulated modes
   variants     — beyond-paper: framework variant sites + expression families
   roofline     — §Roofline table from the dry-run reports
+  sweep        — DiscriminantSweep census throughput, 1 vs N workers
 """
 
 from __future__ import annotations
@@ -40,6 +41,7 @@ from . import (
     bench_paper_tables,
     bench_rank_scaling,
     bench_roofline,
+    bench_sweep,
     bench_turbo,
     bench_variant_sites,
 )
@@ -52,6 +54,7 @@ MODULES = {
     "large_chain": bench_large_chain.run,
     "rank_scaling": bench_rank_scaling.run,
     "roofline": bench_roofline.run,
+    "sweep": bench_sweep.run,
 }
 
 

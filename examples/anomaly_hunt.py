@@ -3,47 +3,50 @@ FLOPs-discriminant test, and report the anomaly rate — the experiment the
 paper positions as the input to performance-model research (Sec. V: "verify
 that there exists an abundance of anomalies").
 
-All instances run as ONE interleaved ExperimentEngine campaign: each chain
-instance is a measurement session, the scheduler spends iterations where
-ranks are still moving, and the whole census persists to ``--state`` so a
-killed hunt resumes (``--resume`` rebuilds the wall-clock workloads from
-the same seeds and re-attaches them to the restored sessions).
+This example is a thin wrapper over the DiscriminantSweep subsystem
+(:mod:`repro.core.sweep` / ``python -m repro.launch.sweep``): the hunt is a
+one-shard census of the chain family whose state lives under ``--out``, so
+a killed hunt resumes exactly where it stopped by re-running the same
+command — and scaling up is just switching to the sweep CLI with more
+shards and workers.
 
     PYTHONPATH=src python examples/anomaly_hunt.py --n 12 --lo 32 --hi 256 \
-        [--policy least_converged_first] [--max-steps N] \
-        [--state /tmp/hunt.json] [--resume]
+        [--backend wall_clock|cost_model] [--max-steps N] [--out DIR]
 """
 
 import argparse
+import os
+import tempfile
 
-from repro.autotune import CampaignSite, rank_sites
-from repro.core import WallClockTimer, filter_candidates, initial_hypothesis_by_time
-from repro.expressions import (
-    build_workloads,
-    flops_table,
-    make_chain_inputs,
-    random_instance,
+from repro.core.sweep import (
+    ShardStore,
+    SweepSpec,
+    census_summary,
+    run_shard,
 )
 
 MAX_MEASUREMENTS = 24
 
 
-def build_instance(seed: int, chain: int, lo: int, hi: int, resume: bool):
-    """One seed's chain instance + measurement backend. On resume only the
-    workload callables are needed (to re-attach timers to the restored
-    sessions); the single-run filtering pass is skipped."""
-    inst = random_instance(chain, lo, hi, seed=seed)
-    algs = inst.algorithms()
-    flops = flops_table(algs)
-    mats = make_chain_inputs(inst.dims, seed=seed)
-    workloads = build_workloads(algs, mats, warmup=True)
-    timer = WallClockTimer(workloads)
-    if resume:
-        return inst, timer, flops, None, {}, ()
-    single = {n: timer.measure(n) for n in workloads}
-    cand = filter_candidates(flops, single, rt_threshold=1.5)
-    h0 = [n for n in initial_hypothesis_by_time(single) if n in cand.names]
-    return inst, timer, flops, h0, single, cand.dropped
+def build_spec(args: argparse.Namespace) -> SweepSpec:
+    """The hunt as a census spec: one shard over the chain family."""
+    return SweepSpec(
+        name="anomaly_hunt",
+        families={
+            "chain": {
+                "count": args.n,
+                "n_matrices": [args.chain],
+                "lo": args.lo,
+                "hi": args.hi,
+            }
+        },
+        n_shards=1,
+        backend=args.backend,
+        max_measurements=MAX_MEASUREMENTS,
+        policy=args.policy,
+        chunk_size=max(args.n, 1),   # one interleaved campaign, like before
+        save_every=10,
+    )
 
 
 def main() -> None:
@@ -52,69 +55,57 @@ def main() -> None:
     ap.add_argument("--lo", type=int, default=32)
     ap.add_argument("--hi", type=int, default=256)
     ap.add_argument("--chain", type=int, default=4, help="matrices per chain")
+    ap.add_argument("--backend", default="wall_clock",
+                    choices=["wall_clock", "cost_model", "simulated"],
+                    help="real JAX measurements, or the deterministic "
+                    "synthetic machine (bit-identical resume)")
     ap.add_argument("--policy", default="least_converged_first",
                     choices=["round_robin", "least_converged_first"])
     ap.add_argument("--max-steps", type=int, default=None,
-                    help="kill the campaign after N engine iterations")
-    ap.add_argument("--state", default=None,
-                    help="persist the campaign to this JSON file")
-    ap.add_argument("--resume", action="store_true",
-                    help="resume a killed campaign from --state")
+                    help="pause the campaign after N engine iterations "
+                    "(re-run the same command to resume)")
+    ap.add_argument("--out", default=None,
+                    help="sweep state directory (default: a fresh tempdir)")
     args = ap.parse_args()
-    if args.resume and not args.state:
-        ap.error("--resume requires --state")
 
-    names, dims_of, timers, sites = [], {}, {}, []
-    for seed in range(args.n):
-        inst, timer, flops, h0, single, dropped = build_instance(
-            seed, args.chain, args.lo, args.hi, args.resume
-        )
-        name = f"seed{seed}"
-        names.append(name)
-        dims_of[name] = inst.dims
-        timers[name] = timer  # re-attached on --resume (wall-clock backend)
-        sites.append(
-            CampaignSite(
-                name=name, timer=timer, flops=dict(flops), initial_order=h0,
-                single_run_times=single, dropped=dropped, backend="wall-clock",
-            )
-        )
-
-    if args.resume:
-        reports = rank_sites(
-            resume_from=args.state, timers=timers, max_steps=args.max_steps,
-            save_path=args.state,
-        )
+    out = args.out or tempfile.mkdtemp(prefix="anomaly_hunt_")
+    spec_file = os.path.join(out, "spec.json")
+    if os.path.exists(spec_file):
+        spec = SweepSpec.load(spec_file)     # resuming: grid comes from disk
+        if spec.to_dict() != build_spec(args).to_dict():
+            print(f"# resuming the census planned in {spec_file}: grid and "
+                  "backend flags from this command line are ignored "
+                  "(use a fresh --out to start a different hunt)")
     else:
-        reports = rank_sites(
-            sites, m_per_iteration=3, eps=0.03,
-            max_measurements=MAX_MEASUREMENTS,
-            policy=args.policy, max_steps=args.max_steps, save_path=args.state,
-        )
+        os.makedirs(out, exist_ok=True)
+        spec = build_spec(args)
+        spec.save(spec_file)
 
-    anomalies = 0
-    for name in names:
-        rep = reports.get(name)
-        if rep is None:  # session never scheduled before the budget ran out
-            print(f"dims={dims_of[name]}  (no iterations yet: resume to measure)")
+    run_shard(spec, out, 0, max_steps=args.max_steps)
+
+    records = {r["uid"]: r for r in ShardStore(out, 0).open().records}
+    done = 0
+    for inst in spec.shard_instances(0):
+        rep = records.get(inst.uid)
+        if rep is None:
+            print(f"{inst.uid}  (pending: re-run to resume the campaign)")
             continue
-        res, disc = rep.ranking, rep.discriminant
-        anomalies += disc.is_anomaly
-        tag = f"ANOMALY ({disc.reason})" if disc.is_anomaly else "ok"
-        # not converged + budget left <-> the campaign was cut short, as
-        # opposed to exhausting max_measurements without meeting eps
-        interrupted = not res.converged and res.measurements_per_alg < MAX_MEASUREMENTS
-        more = " (campaign interrupted: best-so-far)" if interrupted else ""
-        print(f"dims={dims_of[name]}  N={res.measurements_per_alg:2d} "
-              f"classes={max(res.ranks.values())}  {tag}{more}")
+        done += 1
+        tag = f"ANOMALY ({rep['reason']})" if rep["is_anomaly"] else "ok"
+        more = "" if rep["converged"] else " (budget hit before convergence)"
+        print(f"dims={rep['dims']}  N={rep['measurements_per_alg']:2d} "
+              f"classes={rep['classes']}  {tag}{more}")
 
-    print(f"\nanomaly rate: {anomalies}/{args.n} "
-          f"({100.0*anomalies/args.n:.0f}%) at dims in [{args.lo}, {args.hi}]")
-    print("(paper [5] reports ~0.4% at BLAS scale on 10-core MKL; small sizes"
-          " on a noisy shared core are far more anomaly-prone)")
-    if args.state:
-        print(f"campaign state: {args.state}"
-              + (" (resume with --resume)" if args.max_steps else ""))
+    grid = spec.families["chain"]
+    if done:
+        total = census_summary(list(records.values()))["total"]
+        print(f"\nanomaly rate: {total['anomalies']}/{total['n']} "
+              f"({100.0 * total['rate']:.0f}%) at dims in "
+              f"[{grid['lo']}, {grid['hi']}]")
+        print("(paper [5] reports ~0.4% at BLAS scale on 10-core MKL; small "
+              "sizes on a noisy shared core are far more anomaly-prone)")
+    print(f"census state: {out}"
+          + (" (re-run with --out to resume)" if done < grid["count"] else ""))
 
 
 if __name__ == "__main__":

@@ -32,6 +32,16 @@ from .measure import (
     timer_to_dict,
 )
 from .session import MeasurementSession
+from .sweep import (
+    InstanceSpec,
+    ShardStore,
+    SweepSpec,
+    build_sweep_session,
+    census_summary,
+    merge_shards,
+    run_shard,
+    write_merged,
+)
 from .ranking import (
     make_measurement_comparator,
     make_table_comparator,
@@ -69,6 +79,7 @@ __all__ = [
     "DiscriminantReport",
     "ExperimentEngine",
     "FAST_MODE_QUANTILE_RANGES",
+    "InstanceSpec",
     "IterationRecord",
     "MeanRankResult",
     "MeasurementSession",
@@ -81,9 +92,13 @@ __all__ = [
     "RankedAlgorithm",
     "RankingResult",
     "REPORT_QUANTILE_RANGE",
+    "ShardStore",
     "SimulatedTimer",
+    "SweepSpec",
     "Timer",
     "WallClockTimer",
+    "build_sweep_session",
+    "census_summary",
     "compare_measurements",
     "compare_range",
     "convergence_norm",
@@ -96,12 +111,15 @@ __all__ = [
     "make_table_comparator",
     "mean_ranks",
     "measure_and_rank",
+    "merge_shards",
     "min_flops_set",
     "quantile_window",
     "ranks_as_dict",
     "relative_flops",
     "relative_times",
+    "run_shard",
     "sort_algorithms",
+    "write_merged",
     "sort_by_measurements",
     "sort_by_table",
     "timer_from_dict",

@@ -177,17 +177,81 @@ class WallClockTimer(Timer):
         name -> zero-arg callable executing the algorithm once. For JAX
         workloads the callable must block on the result
         (``jax.block_until_ready``) — :mod:`repro.expressions.algorithms`
-        builders do this.
+        builders do this. The first measurement of each workload verifies
+        the contract (see below); ``check_blocking=False`` opts out.
+
+    A workload that dispatches asynchronously and returns before the result
+    is ready (the classic jit-without-``block_until_ready`` mistake) would
+    silently time Python dispatch instead of the algorithm and corrupt the
+    whole campaign. The first time each workload is measured, if its return
+    value exposes ``block_until_ready`` the timer blocks on it *after*
+    stopping the clock: when that post-call block costs as much as the
+    timed call itself, the workload is not blocking and the timer refuses
+    to measure it (loudly, with the offending name).
     """
 
-    def __init__(self, workloads: Mapping[str, Callable[[], object]]):
+    #: Post-call block must exceed BOTH the timed call and this floor
+    #: (seconds) before a sample counts as suspicious — a ready result's
+    #: ``block_until_ready`` returns in microseconds, so honest workloads
+    #: sit orders of magnitude below the floor.
+    NONBLOCKING_FLOOR_S = 1e-4
+    #: A workload is rejected only after this many *consecutive* suspicious
+    #: samples: a single scheduler/GC stall inside an honest workload's
+    #: post-call block must not abort a whole campaign, while a genuinely
+    #: async workload is suspicious every time.
+    NONBLOCKING_ATTEMPTS = 3
+
+    def __init__(
+        self,
+        workloads: Mapping[str, Callable[[], object]],
+        check_blocking: bool = True,
+    ):
         self._workloads = dict(workloads)
+        self._check_blocking = check_blocking
+        self._blocking_checked: set = set()
+
+    def _checked_first_measure(self, name: str, fn: Callable[[], object]) -> float:
+        for attempt in range(self.NONBLOCKING_ATTEMPTS):
+            t0 = time.perf_counter()
+            out = fn()
+            t_call = time.perf_counter() - t0
+            block = getattr(out, "block_until_ready", None)
+            if not callable(block):
+                return t_call
+            t1 = time.perf_counter()
+            block()
+            t_block = time.perf_counter() - t1
+            if t_block <= t_call or t_block <= self.NONBLOCKING_FLOOR_S:
+                return t_call  # blocked internally; result was already ready
+        raise RuntimeError(
+            f"workload {name!r} is not blocking: across "
+            f"{self.NONBLOCKING_ATTEMPTS} samples the call returned "
+            f"(last: {t_call*1e6:.0f}us) before its result was ready "
+            f"(post-call block_until_ready took {t_block*1e6:.0f}us) — wrap "
+            "the workload so it blocks on the computed value "
+            "(jax.block_until_ready) before WallClockTimer measures it"
+        )
 
     def measure(self, name: str) -> float:
+        return self.measure_many(name, 1)[0]
+
+    def measure_many(self, name: str, m: int) -> List[float]:
+        """Batched sampling: one workload lookup (and one blocking-contract
+        check, ever) per batch instead of per sample — the per-sample loop
+        is just clock/call/clock."""
         fn = self._workloads[name]
-        t0 = time.perf_counter()
-        fn()
-        return time.perf_counter() - t0
+        out: List[float] = []
+        if m <= 0:
+            return out
+        if self._check_blocking and name not in self._blocking_checked:
+            self._blocking_checked.add(name)
+            out.append(self._checked_first_measure(name, fn))
+        perf = time.perf_counter
+        while len(out) < m:
+            t0 = perf()
+            fn()
+            out.append(perf() - t0)
+        return out
 
 
 @dataclass

@@ -1,0 +1,733 @@
+"""DiscriminantSweep — a sharded, resumable census of the FLOPs test.
+
+The paper's headline experiment is not one ranking but a *census* (Sec.
+IV-V, Figs. 5-7): sweep many instances of many expression families, run the
+FLOPs-discriminant test on each, and report the anomaly rate by instance
+size and family. This module promotes that experiment to a first-class
+subsystem on top of the :class:`~repro.core.engine.ExperimentEngine`:
+
+* :class:`SweepSpec` — a JSON-serializable grid over expression families
+  (paper chains via :mod:`repro.expressions.instances` *and* the
+  beyond-chain families of :mod:`repro.expressions.generalized`), expanded
+  deterministically into :class:`InstanceSpec` rows and partitioned
+  round-robin into ``n_shards`` independent shards.
+* :class:`ShardStore` — one append-only JSONL results file per shard plus a
+  manifest. Records are appended in whole fsync'd batches; on open, a torn
+  trailing line (SIGKILL mid-append) is truncated away, so the JSONL is the
+  authoritative completed-set and a killed sweep resumes exactly where it
+  stopped.
+* :func:`run_shard` — drives a shard's instances in chunks; each chunk is
+  one interleaved engine campaign whose state (measurement stores, timer
+  RNG, quantile-ladder history) is persisted every ``save_every`` steps via
+  the bit-identical session save/load, so resumed results are *identical*
+  to an uninterrupted run for the deterministic backends.
+* :func:`merge_shards` / :func:`census_summary` — the merge/triage layer:
+  dedup by instance, order by grid index, and aggregate anomaly rates by
+  family and instance size.
+
+Measurement backends (``SweepSpec.backend``):
+
+``cost_model``
+    Deterministic synthetic machine: each algorithm's predicted time is its
+    analytic FLOP count over ``flop_rate``, times a per-algorithm machine
+    efficiency factor (lognormal, ``eff_sigma``) drawn from an
+    instance-seeded RNG — modelling the cache/instruction-order effects
+    that make equal-FLOPs algorithms genuinely differ — measured through a
+    :class:`~repro.core.measure.CostModelTimer` with lognormal measurement
+    noise (``noise_sigma``). Fully serializable: kill/resume is
+    bit-identical.
+``simulated``
+    Same synthetic costs through a :class:`~repro.core.measure.SimulatedTimer`
+    (optionally bimodal, reproducing the paper's turbo-boost regime). Also
+    bit-identical on resume.
+``wall_clock``
+    Real JAX executions of the instance's algorithms. Resumable (no
+    completed instance is re-measured) but new measurements are real time,
+    so resumed runs are statistically — not bitwise — equivalent.
+
+Everything here is importable without jax; expression generators are
+imported lazily inside the builders (workers pay the jax import only when
+they build instances, and only the wall-clock backend executes any).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .discriminant import flops_discriminant_test
+from .engine import ExperimentEngine
+from .measure import CostModelTimer, NoiseProfile, SimulatedTimer, Timer, WallClockTimer
+from .scores import filter_candidates, initial_hypothesis_by_time
+from .session import MeasurementSession
+
+#: Backends a sweep can measure with. The first two serialize their RNG
+#: state, which is what makes kill/resume bit-identical.
+BACKENDS = ("cost_model", "simulated", "wall_clock")
+
+#: Expression families a sweep grid may name. "chain" is the paper's
+#: Expression 1; the rest come from repro.expressions.generalized.
+GENERALIZED_FAMILIES = ("gram", "distributive", "solve", "bilinear")
+FAMILIES = ("chain",) + GENERALIZED_FAMILIES
+
+
+@dataclass(frozen=True)
+class InstanceSpec:
+    """One census row: an expression instance, fully determined by JSON."""
+
+    index: int                #: position in the expanded grid (global order)
+    uid: str                  #: stable identifier, unique within the sweep
+    family: str               #: one of FAMILIES
+    params: Dict[str, Any]    #: family-specific (dims / size / seed)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "index": self.index, "uid": self.uid,
+            "family": self.family, "params": dict(self.params),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "InstanceSpec":
+        return cls(
+            index=int(d["index"]), uid=str(d["uid"]),
+            family=str(d["family"]), params=dict(d["params"]),
+        )
+
+
+@dataclass
+class SweepSpec:
+    """The whole census, declaratively: family grids + campaign knobs.
+
+    ``families`` maps a family name to its grid parameters:
+
+    * ``chain``: ``{"count": int, "n_matrices": [int, ...], "lo": int,
+      "hi": int}`` — ``count`` random chain instances cycling through the
+      ``n_matrices`` list, dims uniform in ``[lo, hi]``.
+    * generalized families: ``{"sizes": [int, ...], "per_size": int}`` —
+      ``per_size`` seeded instances at each size.
+
+    The expansion (and everything downstream: instance seeds, synthetic
+    machine, shard assignment) is a pure function of this spec, so any
+    worker anywhere produces the same census rows for the same spec.
+    """
+
+    name: str = "census"
+    families: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    n_shards: int = 8
+    backend: str = "cost_model"
+    # synthetic machine (cost_model / simulated backends)
+    flop_rate: float = 5e10
+    eff_sigma: float = 0.05
+    noise_sigma: float = 0.02
+    bimodal_shift: float = 0.0
+    bimodal_prob: float = 0.0
+    # campaign (Procedure 4 / engine)
+    m_per_iteration: int = 3
+    eps: float = 0.03
+    max_measurements: int = 24
+    rt_threshold: float = 1.5
+    flops_rel_tol: float = 0.0
+    policy: str = "least_converged_first"
+    chunk_size: int = 8
+    save_every: int = 25
+    base_seed: int = 0
+    #: fsync record batches. SIGKILL-survival never needs this (the page
+    #: cache outlives the process); enable it when the census must survive
+    #: power loss / host crash too. Off by default: fsync serializes all
+    #: workers behind the journal on many filesystems.
+    fsync: bool = False
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        unknown = set(self.families) - set(FAMILIES)
+        if unknown:
+            raise ValueError(f"unknown families {sorted(unknown)}; one of {FAMILIES}")
+
+    # -------------------------------------------------------- expansion ---
+
+    def expand(self) -> List[InstanceSpec]:
+        """The full census grid, in deterministic global order."""
+        out: List[InstanceSpec] = []
+        for family in sorted(self.families):
+            grid = self.families[family]
+            if family == "chain":
+                count = int(grid.get("count", 0))
+                n_list = [int(n) for n in grid.get("n_matrices", [4])]
+                lo, hi = int(grid.get("lo", 32)), int(grid.get("hi", 512))
+                for i in range(count):
+                    n = n_list[i % len(n_list)]
+                    out.append(InstanceSpec(
+                        index=0,
+                        uid=f"chain-n{n}-i{i:05d}",
+                        family="chain",
+                        params={"n_matrices": n, "lo": lo, "hi": hi, "seed": i},
+                    ))
+            else:
+                sizes = [int(s) for s in grid.get("sizes", ())]
+                per_size = int(grid.get("per_size", 1))
+                for size in sizes:
+                    for s in range(per_size):
+                        out.append(InstanceSpec(
+                            index=0,
+                            uid=f"{family}-n{size}-s{s:03d}",
+                            family=family,
+                            params={"size": size, "seed": s},
+                        ))
+        uids = [i.uid for i in out]
+        if len(set(uids)) != len(uids):
+            dupes = sorted({u for u in uids if uids.count(u) > 1})
+            raise ValueError(
+                f"grid expands to duplicate instance uids {dupes[:5]} — "
+                "deduplicate the family sizes/counts (the shard store keys "
+                "records by uid, so duplicates could never all complete)"
+            )
+        return [
+            dataclasses.replace(inst, index=i) for i, inst in enumerate(out)
+        ]
+
+    def shard_of(self, inst: InstanceSpec) -> int:
+        """Round-robin by grid index: adjacent (similar-cost) instances land
+        on different shards, so shards stay balanced."""
+        return inst.index % self.n_shards
+
+    def shard_instances(self, shard: int) -> List[InstanceSpec]:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        return [i for i in self.expand() if self.shard_of(i) == shard]
+
+    # ------------------------------------------------------ persistence ---
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["version"] = 1
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SweepSpec":
+        kwargs = {
+            f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d
+        }
+        return cls(**kwargs)
+
+    def save(self, path: str) -> str:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "SweepSpec":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+
+# ------------------------------------------------------ instance builders ---
+
+
+def _instance_entropy(spec: SweepSpec, inst: InstanceSpec, stream: int) -> List[int]:
+    """Deterministic, collision-free RNG entropy for one instance: distinct
+    ``stream`` values give independent streams (machine efficiency vs
+    measurement noise vs shuffle)."""
+    return [int(spec.base_seed), int(inst.index), int(stream)]
+
+
+def synthetic_costs(
+    flops: Mapping[str, float],
+    rng: np.random.Generator,
+    flop_rate: float,
+    eff_sigma: float,
+) -> Dict[str, float]:
+    """Predicted seconds per algorithm on the synthetic machine: FLOPs over
+    peak rate, times a frozen per-algorithm lognormal efficiency factor.
+    The factor models what the paper attributes anomalies to — equal-FLOPs
+    algorithms differing in cache behaviour and instruction order — and is
+    part of the *machine*, not the measurement noise: it is drawn once per
+    instance (in sorted algorithm order, so it is reproducible) and held
+    fixed across all measurements."""
+    costs: Dict[str, float] = {}
+    for name in sorted(flops):
+        eff = math.exp(float(rng.normal(0.0, eff_sigma)))
+        costs[name] = float(flops[name]) / flop_rate * eff
+    return costs
+
+
+def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
+    """(flops table, descriptive meta, workload-builder thunk) for a chain
+    instance. Expression generators are imported lazily so cost-model
+    workers never build a single jax array."""
+    from repro.expressions.chain import flops_table
+    from repro.expressions.instances import random_instance
+
+    p = inst.params
+    chain = random_instance(
+        int(p["n_matrices"]), int(p["lo"]), int(p["hi"]), seed=int(p["seed"])
+    )
+    algs = chain.algorithms()
+    flops = flops_table(algs)
+    dims = list(chain.dims)
+    size = int(round(float(np.exp(np.mean(np.log(dims))))))  # geometric mean
+
+    def build_workloads() -> Dict[str, Callable[[], Any]]:
+        from repro.expressions.algorithms import build_workloads as bw
+        from repro.expressions.algorithms import make_chain_inputs
+
+        mats = make_chain_inputs(chain.dims, seed=int(p["seed"]))
+        return bw(algs, mats, warmup=True)
+
+    meta = {"size": size, "dims": dims}
+    return flops, meta, build_workloads
+
+
+def _generalized_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
+    from repro.expressions.generalized import FAMILIES as GEN
+
+    p = inst.params
+    size = int(p["size"])
+    family = GEN[inst.family](n=size)
+    flops = family.flops_table()
+
+    def build_workloads() -> Dict[str, Callable[[], Any]]:
+        return family.workloads(size, seed=int(p["seed"]), warmup=True)
+
+    meta = {"size": size, "dims": None}
+    return flops, meta, build_workloads
+
+
+def instance_entry(inst: InstanceSpec):
+    if inst.family == "chain":
+        return _chain_entry(inst)
+    if inst.family in GENERALIZED_FAMILIES:
+        return _generalized_entry(inst)
+    raise ValueError(f"unknown family {inst.family!r}")
+
+
+def build_timer(spec: SweepSpec, inst: InstanceSpec, flops: Mapping[str, float],
+                build_workloads: Callable[[], Dict[str, Callable[[], Any]]]) -> Timer:
+    """The instance's measurement backend, fully derived from the spec."""
+    if spec.backend == "wall_clock":
+        return WallClockTimer(build_workloads())
+    eff_rng = np.random.default_rng(_instance_entropy(spec, inst, 1))
+    costs = synthetic_costs(flops, eff_rng, spec.flop_rate, spec.eff_sigma)
+    noise_seed = np.random.default_rng(
+        _instance_entropy(spec, inst, 2)
+    ).integers(0, 2**63 - 1)
+    if spec.backend == "cost_model":
+        return CostModelTimer(costs, rel_sigma=spec.noise_sigma, seed=int(noise_seed))
+    profiles = {
+        name: NoiseProfile(
+            base=cost,
+            rel_sigma=spec.noise_sigma,
+            bimodal_shift=spec.bimodal_shift,
+            bimodal_prob=spec.bimodal_prob,
+        )
+        for name, cost in costs.items()
+    }
+    return SimulatedTimer(profiles, seed=int(noise_seed))
+
+
+def build_sweep_session(spec: SweepSpec, inst: InstanceSpec) -> MeasurementSession:
+    """Paper Sec. I steps 1-4 for one census instance: single warm run per
+    algorithm, RT candidate filtering, initial hypothesis by time, then a
+    resumable Procedure-4 session. The FLOP table and filter decisions ride
+    in ``session.meta`` so the discriminant verdict survives engine
+    save/load without re-deriving the instance."""
+    flops, desc, build_workloads = instance_entry(inst)
+    timer = build_timer(spec, inst, flops, build_workloads)
+    single = {name: timer.measure(name) for name in flops}
+    cand = filter_candidates(
+        flops, single,
+        rt_threshold=spec.rt_threshold, flops_rel_tol=spec.flops_rel_tol,
+    )
+    h0 = [n for n in initial_hypothesis_by_time(single) if n in cand.names]
+    shuffle_seed = int(
+        np.random.default_rng(_instance_entropy(spec, inst, 3)).integers(0, 2**31 - 1)
+    )
+    return MeasurementSession(
+        inst.uid,
+        h0,
+        timer,
+        m_per_iteration=spec.m_per_iteration,
+        eps=spec.eps,
+        max_measurements=spec.max_measurements,
+        shuffle_seed=shuffle_seed,
+        meta={
+            "uid": inst.uid,
+            "index": inst.index,
+            "family": inst.family,
+            "size": desc["size"],
+            "dims": desc["dims"],
+            "flops": {k: float(v) for k, v in flops.items()},
+            "dropped": list(cand.dropped),
+            "backend": spec.backend,
+        },
+    )
+
+
+def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[str, Any]:
+    """One census JSONL record (DiscriminantReport + ranking digest).
+
+    Deliberately contains *only* deterministic fields — no wall times, no
+    hostnames — so an interrupted-and-resumed sweep merges byte-identical
+    to an uninterrupted one (the kill/resume tests diff the files)."""
+    meta = session.meta
+    ranking = session.result(measure_if_needed=False)
+    disc = flops_discriminant_test(
+        ranking, {k: float(v) for k, v in meta["flops"].items()},
+        flops_rel_tol=spec.flops_rel_tol,
+    )
+    return {
+        "uid": meta["uid"],
+        "index": int(meta["index"]),
+        "family": meta["family"],
+        "size": meta["size"],
+        "dims": meta["dims"],
+        "backend": meta.get("backend", spec.backend),
+        "p": len(ranking.sequence),
+        "n_dropped": len(meta.get("dropped", ())),
+        "measurements_per_alg": ranking.measurements_per_alg,
+        "iterations": len(ranking.history),
+        "converged": ranking.converged,
+        "classes": max(ranking.ranks.values()),
+        "is_anomaly": bool(disc.is_anomaly),
+        "reason": disc.reason,
+        "min_flops_algs": list(disc.min_flops_algs),
+        "best_rank_in_sf": disc.best_rank_in_sf,
+        "best_rank_overall": disc.best_rank_overall,
+        "ranks": disc.ranks,
+        "mean_ranks": {k: float(v) for k, v in ranking.mean_ranks.items()},
+        "relative_flops": {k: float(v) for k, v in disc.relative_flops.items()},
+    }
+
+
+# -------------------------------------------------------------- the store ---
+
+
+def _record_line(record: Mapping[str, Any]) -> str:
+    return json.dumps(record, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+class ShardStore:
+    """Append-only JSONL census records for ONE shard, plus a manifest.
+
+    Crash contract: records are appended in whole fsync'd batches and the
+    manifest is rewritten atomically afterwards. The JSONL itself is the
+    source of truth on resume — :meth:`open` truncates a torn trailing line
+    (kill mid-append) and recomputes the manifest, so the completed set
+    never contains a half-written record and never loses a whole one.
+    """
+
+    def __init__(self, root: str, shard: int, fsync: bool = False) -> None:
+        self.root = root
+        self.shard = shard
+        self.fsync = fsync
+        self.records_path = os.path.join(root, f"shard-{shard:04d}.jsonl")
+        self.manifest_path = os.path.join(root, f"shard-{shard:04d}.manifest.json")
+        self.engine_path = os.path.join(root, f"shard-{shard:04d}.engine.json")
+        self._records: List[Dict[str, Any]] = []
+        self._opened = False
+
+    # ---------------------------------------------------------- reading ---
+
+    def open(self, readonly: bool = False) -> "ShardStore":
+        """Load (and crash-recover) the shard's records.
+
+        A torn trailing line (SIGKILL mid-append) is always *ignored*; it
+        is physically truncated only when ``readonly`` is False. Read-only
+        consumers (status / merge / report) may run concurrently with a
+        live worker, and what looks like a torn tail to them may be that
+        worker's append in flight — only the shard's owning worker, which
+        is single per shard, may rewrite the file."""
+        if not readonly:
+            os.makedirs(self.root, exist_ok=True)
+        self._records = []
+        if os.path.exists(self.records_path):
+            with open(self.records_path, "rb") as fh:
+                data = fh.read()
+            good_end = 0
+            for line in data.splitlines(keepends=True):
+                if not line.endswith(b"\n"):
+                    break  # torn tail: the batch never committed
+                try:
+                    rec = json.loads(line.decode("utf-8"))
+                except (ValueError, UnicodeDecodeError):
+                    break  # corrupt line: drop it and everything after
+                self._records.append(rec)
+                good_end += len(line)
+            if good_end < len(data) and not readonly:
+                with open(self.records_path, "r+b") as fh:
+                    fh.truncate(good_end)
+        self._opened = True
+        return self
+
+    @property
+    def records(self) -> List[Dict[str, Any]]:
+        self._ensure_open()
+        return list(self._records)
+
+    def completed_uids(self) -> List[str]:
+        self._ensure_open()
+        return [r["uid"] for r in self._records]
+
+    def _ensure_open(self) -> None:
+        if not self._opened:
+            raise RuntimeError("ShardStore.open() must be called first")
+
+    # ---------------------------------------------------------- writing ---
+
+    def append_records(self, records: Sequence[Mapping[str, Any]]) -> int:
+        """Append a batch (skipping already-present uids), fsync, refresh
+        the manifest. Returns the number actually appended."""
+        self._ensure_open()
+        seen = set(self.completed_uids())
+        fresh = [dict(r) for r in records if r["uid"] not in seen]
+        if fresh:
+            with open(self.records_path, "a") as fh:
+                for r in fresh:
+                    fh.write(_record_line(r))
+                fh.flush()
+                if self.fsync:
+                    os.fsync(fh.fileno())
+            self._records.extend(fresh)
+        self.write_manifest()
+        return len(fresh)
+
+    def write_manifest(self, done: Optional[bool] = None) -> None:
+        self._ensure_open()
+        manifest = {
+            "shard": self.shard,
+            "n_completed": len(self._records),
+            "completed_uids": [r["uid"] for r in self._records],
+        }
+        if done is not None:
+            manifest["done"] = bool(done)
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(manifest, fh, indent=1, sort_keys=True)
+            fh.flush()
+            if self.fsync:
+                os.fsync(fh.fileno())
+        os.replace(tmp, self.manifest_path)
+
+    # ----------------------------------------------------- engine state ---
+
+    def has_engine_state(self) -> bool:
+        return os.path.exists(self.engine_path)
+
+    def clear_engine_state(self) -> None:
+        if os.path.exists(self.engine_path):
+            os.remove(self.engine_path)
+
+
+# -------------------------------------------------------------- the runner ---
+
+
+def _wall_clock_timers(
+    spec: SweepSpec, instances: Mapping[str, InstanceSpec], uids: Iterable[str]
+) -> Dict[str, Timer]:
+    """Rebuild wall-clock backends for a resumed engine chunk (callables do
+    not serialize; everything derives from the spec)."""
+    timers: Dict[str, Timer] = {}
+    for uid in uids:
+        inst = instances[uid]
+        flops, _, build_workloads = instance_entry(inst)
+        timers[uid] = WallClockTimer(build_workloads())
+    return timers
+
+
+def run_shard(
+    spec: SweepSpec,
+    root: str,
+    shard: int,
+    *,
+    max_steps: Optional[int] = None,
+    progress: Optional[Callable[[str], None]] = None,
+) -> ShardStore:
+    """Run (or resume) one shard of the census to completion.
+
+    The shard's instances are processed in chunks of ``spec.chunk_size``;
+    each chunk is one interleaved :class:`ExperimentEngine` campaign. The
+    engine state is persisted every ``spec.save_every`` steps and at every
+    chunk boundary; completed chunks append their records to the shard's
+    JSONL and drop the engine state. Any kill point therefore resumes
+    losing at most ``save_every`` engine steps of *work* and zero steps of
+    *determinism*: the serialized timer RNG state replays the lost steps
+    bit-identically (cost_model / simulated backends).
+
+    ``max_steps`` bounds the number of engine steps this call takes (the
+    shard is left resumable mid-chunk) — used by tests and deadline-driven
+    callers.
+    """
+    say = progress or (lambda msg: None)
+    store = ShardStore(root, shard, fsync=spec.fsync).open()
+    instances = {i.uid: i for i in spec.shard_instances(shard)}
+    completed = set(store.completed_uids())
+    todo = [i for i in spec.shard_instances(shard) if i.uid not in completed]
+    steps_left = max_steps
+
+    while True:
+        engine: Optional[ExperimentEngine] = None
+        if store.has_engine_state():
+            timers = None
+            if spec.backend == "wall_clock":
+                with open(store.engine_path) as fh:
+                    names = [s["name"] for s in json.load(fh)["sessions"]]
+                timers = _wall_clock_timers(spec, instances, names)
+            engine = ExperimentEngine.load(store.engine_path, timers=timers)
+            chunk_uids = engine.session_names
+            if all(uid in completed for uid in chunk_uids):
+                # killed between record append and state cleanup
+                store.clear_engine_state()
+                continue
+            say(f"shard {shard}: resuming chunk of {len(chunk_uids)}")
+        else:
+            chunk = todo[: spec.chunk_size]
+            if not chunk:
+                break
+            engine = ExperimentEngine(policy=spec.policy)
+            for inst in chunk:
+                engine.add_session(build_sweep_session(spec, inst))
+            engine.save(store.engine_path)
+            chunk_uids = engine.session_names
+            say(f"shard {shard}: new chunk of {len(chunk)} "
+                f"({len(completed)}/{len(instances)} done)")
+
+        since_save = 0
+        while not engine.done:
+            if steps_left is not None and steps_left <= 0:
+                engine.save(store.engine_path)
+                say(f"shard {shard}: paused (step budget)")
+                return store
+            if engine.step() is None:
+                break
+            since_save += 1
+            if steps_left is not None:
+                steps_left -= 1
+            if since_save >= spec.save_every:
+                engine.save(store.engine_path)
+                since_save = 0
+
+        records = [
+            record_from_session(engine.session(uid), spec) for uid in chunk_uids
+        ]
+        store.append_records(records)
+        store.clear_engine_state()
+        completed.update(chunk_uids)
+        todo = [i for i in todo if i.uid not in completed]
+
+    store.write_manifest(done=True)
+    say(f"shard {shard}: done ({len(completed)}/{len(instances)})")
+    return store
+
+
+# ------------------------------------------------------------ merge/triage ---
+
+
+def merge_shards(spec: SweepSpec, root: str) -> List[Dict[str, Any]]:
+    """All shard records, deduped by uid, in global grid order."""
+    seen: Dict[str, Dict[str, Any]] = {}
+    for shard in range(spec.n_shards):
+        store = ShardStore(root, shard).open(readonly=True)
+        for r in store.records:
+            seen.setdefault(r["uid"], r)
+    return sorted(seen.values(), key=lambda r: r["index"])
+
+
+def write_merged(spec: SweepSpec, root: str, path: Optional[str] = None) -> str:
+    """Write the merged census as one JSONL (atomic), return the path."""
+    path = path or os.path.join(root, "merged.jsonl")
+    records = merge_shards(spec, root)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        for r in records:
+            fh.write(_record_line(r))
+    os.replace(tmp, path)
+    return path
+
+
+def size_bucket(size: int) -> str:
+    """Power-of-two size bucket label, e.g. ``[128, 256)``."""
+    lo = 1
+    while lo * 2 <= size:
+        lo *= 2
+    return f"[{lo}, {lo * 2})"
+
+
+def census_summary(records: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
+    """Anomaly-rate aggregates: overall, by family, by size bucket, and by
+    family x size — the numbers behind the paper's Figs. 5-7."""
+
+    def agg(rows: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
+        n = len(rows)
+        anom = [r for r in rows if r["is_anomaly"]]
+        reasons: Dict[str, int] = {}
+        for r in anom:
+            reasons[r["reason"]] = reasons.get(r["reason"], 0) + 1
+        return {
+            "n": n,
+            "anomalies": len(anom),
+            "rate": (len(anom) / n) if n else 0.0,
+            "reasons": reasons,
+            "converged": sum(1 for r in rows if r["converged"]),
+        }
+
+    by_family: Dict[str, Any] = {}
+    for fam in sorted({r["family"] for r in records}):
+        by_family[fam] = agg([r for r in records if r["family"] == fam])
+    by_size: Dict[str, Any] = {}
+    for bucket in sorted(
+        {size_bucket(r["size"]) for r in records},
+        key=lambda b: int(b[1:].split(",")[0]),
+    ):
+        by_size[bucket] = agg(
+            [r for r in records if size_bucket(r["size"]) == bucket]
+        )
+    by_family_size: Dict[str, Any] = {}
+    for fam, fam_agg in by_family.items():
+        rows = [r for r in records if r["family"] == fam]
+        by_family_size[fam] = {
+            bucket: agg([r for r in rows if size_bucket(r["size"]) == bucket])
+            for bucket in sorted(
+                {size_bucket(r["size"]) for r in rows},
+                key=lambda b: int(b[1:].split(",")[0]),
+            )
+        }
+    return {
+        "total": agg(list(records)),
+        "by_family": by_family,
+        "by_size": by_size,
+        "by_family_size": by_family_size,
+    }
+
+
+def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
+    """Completed / total per shard (the ``plan``/``run`` status line)."""
+    per_shard = []
+    total_done = 0
+    for shard in range(spec.n_shards):
+        n_total = len(spec.shard_instances(shard))
+        store = ShardStore(root, shard)
+        n_done = 0
+        if os.path.exists(store.records_path):
+            n_done = len(store.open(readonly=True).completed_uids())
+        in_flight = os.path.exists(store.engine_path)
+        per_shard.append({
+            "shard": shard, "done": n_done, "total": n_total,
+            "in_flight_chunk": in_flight,
+        })
+        total_done += n_done
+    return {
+        "name": spec.name,
+        "instances": len(spec.expand()),
+        "completed": total_done,
+        "shards": per_shard,
+    }

@@ -4,80 +4,112 @@ Enumerates mathematically equivalent algorithms (parenthesizations ×
 instruction orders, plus beyond-chain identity families) with exact analytic
 FLOP counts and executable JAX implementations. This is the substrate the
 paper's ranking methodology is demonstrated on.
+
+The package imports lazily (PEP 562): the *analytic* layer (``chain``,
+``instances``, family FLOP tables) is pure numpy, and jax is only imported
+when an executable workload is actually built. DiscriminantSweep census
+workers on the cost-model backend therefore start without paying the jax
+import at all.
 """
 
-from .algorithms import (
-    build_algorithm_fn,
-    build_workloads,
-    make_chain_inputs,
-    reference_product,
-    verify_algorithms,
-)
-from .chain import (
-    ChainAlgorithm,
-    algorithms_for_tree,
-    dp_optimal_flops,
-    enumerate_trees,
-    flops_table,
-    generate_chain_algorithms,
-    linear_extensions,
-    tree_dims,
-    tree_flops,
-    tree_label,
-)
-from .generalized import (
-    FAMILIES,
-    ExpressionFamily,
-    ExpressionVariant,
-    bilinear_family,
-    distributive_family,
-    gram_family,
-    solve_family,
-)
-from .instances import (
-    ANOMALY_331,
-    FIG3_75,
-    INSTANCE_A,
-    INSTANCE_B,
-    PAPER_INSTANCES,
-    SMOKE_INSTANCES,
-    ChainInstance,
-    get_instance,
-    instance_grid,
-    random_instance,
-)
+from typing import TYPE_CHECKING
 
-__all__ = [
-    "ANOMALY_331",
-    "ChainAlgorithm",
-    "ChainInstance",
-    "ExpressionFamily",
-    "ExpressionVariant",
-    "FAMILIES",
-    "FIG3_75",
-    "INSTANCE_A",
-    "INSTANCE_B",
-    "PAPER_INSTANCES",
-    "SMOKE_INSTANCES",
-    "algorithms_for_tree",
-    "bilinear_family",
-    "build_algorithm_fn",
-    "build_workloads",
-    "distributive_family",
-    "dp_optimal_flops",
-    "enumerate_trees",
-    "flops_table",
-    "generate_chain_algorithms",
-    "get_instance",
-    "gram_family",
-    "instance_grid",
-    "linear_extensions",
-    "make_chain_inputs",
-    "random_instance",
-    "reference_product",
-    "solve_family",
-    "tree_dims",
-    "tree_flops",
-    "tree_label",
-    "verify_algorithms",
-]
+#: attribute name -> defining submodule
+_EXPORTS = {
+    # algorithms (imports jax)
+    "build_algorithm_fn": "algorithms",
+    "build_workloads": "algorithms",
+    "make_chain_inputs": "algorithms",
+    "reference_product": "algorithms",
+    "verify_algorithms": "algorithms",
+    # chain (pure python/numpy)
+    "ChainAlgorithm": "chain",
+    "algorithms_for_tree": "chain",
+    "dp_optimal_flops": "chain",
+    "enumerate_trees": "chain",
+    "flops_table": "chain",
+    "generate_chain_algorithms": "chain",
+    "linear_extensions": "chain",
+    "tree_dims": "chain",
+    "tree_flops": "chain",
+    "tree_label": "chain",
+    # generalized (jax deferred to workload build time)
+    "FAMILIES": "generalized",
+    "ExpressionFamily": "generalized",
+    "ExpressionVariant": "generalized",
+    "bilinear_family": "generalized",
+    "distributive_family": "generalized",
+    "gram_family": "generalized",
+    "solve_family": "generalized",
+    # instances (numpy only)
+    "ANOMALY_331": "instances",
+    "FIG3_75": "instances",
+    "INSTANCE_A": "instances",
+    "INSTANCE_B": "instances",
+    "PAPER_INSTANCES": "instances",
+    "SMOKE_INSTANCES": "instances",
+    "ChainInstance": "instances",
+    "get_instance": "instances",
+    "instance_grid": "instances",
+    "random_instance": "instances",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        module = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(module, name)
+        globals()[name] = value  # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from .algorithms import (
+        build_algorithm_fn,
+        build_workloads,
+        make_chain_inputs,
+        reference_product,
+        verify_algorithms,
+    )
+    from .chain import (
+        ChainAlgorithm,
+        algorithms_for_tree,
+        dp_optimal_flops,
+        enumerate_trees,
+        flops_table,
+        generate_chain_algorithms,
+        linear_extensions,
+        tree_dims,
+        tree_flops,
+        tree_label,
+    )
+    from .generalized import (
+        FAMILIES,
+        ExpressionFamily,
+        ExpressionVariant,
+        bilinear_family,
+        distributive_family,
+        gram_family,
+        solve_family,
+    )
+    from .instances import (
+        ANOMALY_331,
+        FIG3_75,
+        INSTANCE_A,
+        INSTANCE_B,
+        PAPER_INSTANCES,
+        SMOKE_INSTANCES,
+        ChainInstance,
+        get_instance,
+        instance_grid,
+        random_instance,
+    )

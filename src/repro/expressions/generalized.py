@@ -18,15 +18,18 @@ this broader LAMP space):
 
 Each family yields named variants with analytic FLOP counts and JAX
 callables, pluggable into the same ranking pipeline as the chains.
+
+jax is imported lazily, at workload-build time: constructing a family and
+reading its FLOP table is pure python/numpy, so analytic consumers (the
+DiscriminantSweep cost-model backend, FLOP-count tests) never pay the jax
+import.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -35,23 +38,23 @@ class ExpressionVariant:
     name: str
     label: str
     flops: float
-    build: Callable[..., Callable[[], jax.Array]]  # (*arrays) -> thunk
+    build: Callable[..., Callable[[], Any]]  # (*arrays) -> thunk
 
 
 @dataclass(frozen=True)
 class ExpressionFamily:
     name: str
     variants: Tuple[ExpressionVariant, ...]
-    make_inputs: Callable[[int, int], List[jax.Array]]  # (size, seed)
+    make_inputs: Callable[[int, int], List[Any]]  # (size, seed)
 
     def flops_table(self) -> Dict[str, float]:
         return {v.name: v.flops for v in self.variants}
 
     def workloads(
         self, size: int, seed: int = 0, warmup: bool = True
-    ) -> Dict[str, Callable[[], jax.Array]]:
+    ) -> Dict[str, Callable[[], Any]]:
         arrays = self.make_inputs(size, seed)
-        table: Dict[str, Callable[[], jax.Array]] = {}
+        table: Dict[str, Callable[[], Any]] = {}
         for v in self.variants:
             thunk = v.build(*arrays)
             if warmup:
@@ -60,11 +63,13 @@ class ExpressionFamily:
         return table
 
 
-def _jit_thunk(fn: Callable[..., jax.Array], *arrays: jax.Array) -> Callable[[], jax.Array]:
+def _jit_thunk(fn: Callable[..., Any], *arrays: Any) -> Callable[[], Any]:
+    import jax
+
     jitted = jax.jit(fn)
     jax.block_until_ready(jitted(*arrays))  # compile outside timed region
 
-    def run() -> jax.Array:
+    def run() -> Any:
         return jax.block_until_ready(jitted(*arrays))
 
     return run
@@ -75,7 +80,10 @@ def _jit_thunk(fn: Callable[..., jax.Array], *arrays: jax.Array) -> Callable[[],
 def gram_family(n: int, k: int) -> ExpressionFamily:
     """``X = A Aᵀ B`` with A: n×k, B: n×n."""
 
-    def inputs(size: int, seed: int) -> List[jax.Array]:
+    def inputs(size: int, seed: int) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+
         kk = max(1, int(k * size / n))
         key = jax.random.PRNGKey(seed)
         k1, k2 = jax.random.split(key)
@@ -83,13 +91,13 @@ def gram_family(n: int, k: int) -> ExpressionFamily:
         b = jax.random.normal(k2, (size, size), jnp.float32) / np.sqrt(size)
         return [a, b]
 
-    def left_first(a: jax.Array, b: jax.Array) -> Callable[[], jax.Array]:
+    def left_first(a: Any, b: Any) -> Callable[[], Any]:
         return _jit_thunk(lambda a, b: (a @ a.T) @ b, a, b)
 
-    def right_first(a: jax.Array, b: jax.Array) -> Callable[[], jax.Array]:
+    def right_first(a: Any, b: Any) -> Callable[[], Any]:
         return _jit_thunk(lambda a, b: a @ (a.T @ b), a, b)
 
-    def left_syrk(a: jax.Array, b: jax.Array) -> Callable[[], jax.Array]:
+    def left_syrk(a: Any, b: Any) -> Callable[[], Any]:
         # Symmetric rank-k update semantics: same math; in BLAS syrk halves
         # the FLOPs of AAᵀ. XLA has no syrk — the *analytic* count differs,
         # which is the interesting case for the discriminant test.
@@ -116,7 +124,10 @@ def gram_family(n: int, k: int) -> ExpressionFamily:
 def distributive_family(n: int) -> ExpressionFamily:
     """``X = (A + B) C`` vs ``AC + BC`` (A, B, C: n×n)."""
 
-    def inputs(size: int, seed: int) -> List[jax.Array]:
+    def inputs(size: int, seed: int) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+
         keys = jax.random.split(jax.random.PRNGKey(seed), 3)
         return [
             jax.random.normal(kk, (size, size), jnp.float32) / np.sqrt(size)
@@ -141,7 +152,10 @@ def distributive_family(n: int) -> ExpressionFamily:
 def solve_family(n: int) -> ExpressionFamily:
     """``x = A⁻¹ b``: explicit inverse vs LU solve (A: n×n SPD-ish)."""
 
-    def inputs(size: int, seed: int) -> List[jax.Array]:
+    def inputs(size: int, seed: int) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+
         k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
         a = jax.random.normal(k1, (size, size), jnp.float32) / np.sqrt(size)
         a = a @ a.T + size * jnp.eye(size, dtype=jnp.float32)  # well-conditioned
@@ -149,12 +163,19 @@ def solve_family(n: int) -> ExpressionFamily:
         return [a, b]
 
     def via_inverse(a, b):
+        import jax.numpy as jnp
+
         return _jit_thunk(lambda a, b: jnp.linalg.inv(a) @ b, a, b)
 
     def via_solve(a, b):
+        import jax.numpy as jnp
+
         return _jit_thunk(lambda a, b: jnp.linalg.solve(a, b), a, b)
 
     def via_cholesky(a, b):
+        import jax.scipy
+        import jax.numpy as jnp
+
         def f(a, b):
             l = jnp.linalg.cholesky(a)
             y = jax.scipy.linalg.solve_triangular(l, b, lower=True)
@@ -175,7 +196,10 @@ def solve_family(n: int) -> ExpressionFamily:
 def bilinear_family(n: int) -> ExpressionFamily:
     """``y = uᵀ M v``: row-major vs column-major traversal, equal FLOPs."""
 
-    def inputs(size: int, seed: int) -> List[jax.Array]:
+    def inputs(size: int, seed: int) -> List[Any]:
+        import jax
+        import jax.numpy as jnp
+
         keys = jax.random.split(jax.random.PRNGKey(seed), 3)
         u = jax.random.normal(keys[0], (size,), jnp.float32)
         m = jax.random.normal(keys[1], (size, size), jnp.float32) / np.sqrt(size)

@@ -1,0 +1,74 @@
+"""JAX version-compat shims for the launch layer.
+
+The repo targets a range of JAX releases (see README "Supported JAX
+versions"). The launch layer is the only place that touches version-moving
+jax APIs, and this module is the single choke point for those differences:
+
+* ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=)``) only
+  exist from jax 0.6; on older releases every mesh axis is implicitly
+  "auto", which is exactly what we request on newer releases — so the shim
+  simply omits the argument when the enum is missing.
+* ``jax.shard_map`` (with ``check_vma=``) graduated from
+  ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``);
+  :func:`shard_map` speaks the new spelling on any supported release.
+
+Use :func:`make_mesh` instead of calling ``jax.make_mesh`` directly
+anywhere a mesh is built (``repro.launch.mesh``, ``repro.launch.train``,
+tests).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+
+#: True when this jax exposes explicit axis types (jax >= 0.6).
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax < 0.6: experimental home, old keyword
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def auto_axis_types(n: int) -> Optional[tuple]:
+    """``(AxisType.Auto,) * n`` on jax >= 0.6, else None (implicit auto)."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with auto axis types on every axis, portable across
+    the AxisType API break (jax 0.6)."""
+    kwargs = {}
+    if HAS_AXIS_TYPE:
+        kwargs["axis_types"] = auto_axis_types(len(axis_names))
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+):
+    """``jax.shard_map`` portable across its graduation from
+    ``jax.experimental`` (the replication-check kwarg was renamed
+    ``check_rep`` -> ``check_vma`` in the move)."""
+    kwargs = {_CHECK_KW: check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

@@ -17,24 +17,20 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.launch.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(n_pods: int = 1, dp: int = 16, tp: int = 16):
     """General mesh: (pod, data, model) or (data, model) when n_pods == 1."""
     if n_pods > 1:
-        return jax.make_mesh(
-            (n_pods, dp, tp), ("pod", "data", "model"), axis_types=_auto(3)
-        )
-    return jax.make_mesh((dp, tp), ("data", "model"), axis_types=_auto(2))
+        return _compat_make_mesh((n_pods, dp, tp), ("pod", "data", "model"))
+    return _compat_make_mesh((dp, tp), ("data", "model"))
 
 
 def make_host_mesh(tp: Optional[int] = None):
@@ -49,7 +45,7 @@ def make_host_mesh(tp: Optional[int] = None):
         while tp * 2 <= n and tp * 2 <= 8:
             tp *= 2
     dp = max(n // tp, 1)
-    return jax.make_mesh((dp, tp), ("data", "model"), axis_types=_auto(2))
+    return _compat_make_mesh((dp, tp), ("data", "model"))
 
 
 def describe(mesh) -> str:

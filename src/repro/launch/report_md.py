@@ -1,10 +1,61 @@
-"""Render EXPERIMENTS.md roofline tables from the dry-run reports."""
+"""Render EXPERIMENTS.md roofline tables from the dry-run reports, and the
+census (DiscriminantSweep) anomaly-rate tables in the style of the paper's
+Figs. 5-7."""
 
 import json
 import os
 import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../.."))
+
+
+def _census_agg_row(label: str, a: dict) -> str:
+    reasons = a.get("reasons", {})
+    return (
+        f"| {label} | {a['n']} | {a['anomalies']} | {100.0 * a['rate']:.1f}% | "
+        f"{reasons.get('min_flops_split', 0)} | "
+        f"{reasons.get('faster_outside_min_flops', 0)} | "
+        f"{a['converged']}/{a['n']} |"
+    )
+
+
+_CENSUS_HEADER = (
+    "| {col} | n | anomalies | rate | S_F split | faster outside S_F | "
+    "converged |\n|---|---|---|---|---|---|---|"
+)
+
+
+def census_tables(records, name: str = "census") -> str:
+    """Markdown anomaly-rate tables (overall / by family / by instance size
+    / family x size) from merged DiscriminantSweep records — the paper's
+    Figs. 5-7 presentation of "an abundance of anomalies"."""
+    from repro.core.sweep import census_summary
+
+    s = census_summary(records)
+    total = s["total"]
+    out = [
+        f"## Census `{name}` — FLOPs-discriminant anomaly rate",
+        "",
+        f"{total['n']} instances, {total['anomalies']} anomalies "
+        f"({100.0 * total['rate']:.1f}%), "
+        f"{total['converged']}/{total['n']} campaigns converged.",
+        "",
+        "### By expression family",
+        "",
+        _CENSUS_HEADER.format(col="family"),
+    ]
+    for fam, a in s["by_family"].items():
+        out.append(_census_agg_row(fam, a))
+    out += ["", "### By instance size (geometric-mean dimension)", "",
+            _CENSUS_HEADER.format(col="size")]
+    for bucket, a in s["by_size"].items():
+        out.append(_census_agg_row(f"`{bucket}`", a))
+    out += ["", "### Family x size", "",
+            _CENSUS_HEADER.format(col="family / size")]
+    for fam, buckets in s["by_family_size"].items():
+        for bucket, a in buckets.items():
+            out.append(_census_agg_row(f"{fam} `{bucket}`", a))
+    return "\n".join(out) + "\n"
 
 
 def roofline_table(label: str) -> str:

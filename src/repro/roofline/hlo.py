@@ -71,6 +71,44 @@ def _prod(xs) -> int:
     return n
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only (shape strings
+    like ``f32[32,256]{1,0}`` embed commas inside brackets/braces)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return [o for o in out if o]
+
+
+def _operand_name(op: str) -> str:
+    """Bare instruction name of one operand: the trailing ``%name`` token
+    (newer HLO prints operands with inline types, older as bare names)."""
+    tok = op.split()[-1] if op.split() else op
+    return tok.lstrip("%")
+
+
+def _operand_type(op: str, comp: "Computation") -> str:
+    """Type string of one operand — inline when present (jax >= 0.4 CPU
+    dialect prints ``dot(f32[...] %x, ...)``), else looked up from the
+    defining instruction in the enclosing computation."""
+    if _SHAPE_RE.search(op):
+        return op
+    return comp.shapes.get(_operand_name(op), "")
+
+
 @dataclass
 class Instruction:
     name: str
@@ -170,9 +208,8 @@ def _dot_flops(instr: Instruction, comp: Computation) -> float:
     m = re.search(r"dot\(([^)]*)\)", instr.rhs)
     if m is None:
         return 0.0
-    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
-    lhs_type = comp.shapes.get(operands[0], "")
-    lhs_arrays = _shape_info(lhs_type)
+    operands = _split_operands(m.group(1))
+    lhs_arrays = _shape_info(_operand_type(operands[0], comp)) if operands else []
     cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rhs)
     if not lhs_arrays or cdims_m is None:
         return 2.0 * out_elems  # conservative fallback
@@ -190,10 +227,10 @@ def _conv_flops(instr: Instruction, comp: Computation) -> float:
     m = re.search(r"convolution\(([^)]*)\)", instr.rhs)
     if m is None:
         return 0.0
-    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    operands = _split_operands(m.group(1))
     if len(operands) < 2:
         return 0.0
-    rhs_arrays = _shape_info(comp.shapes.get(operands[1], ""))
+    rhs_arrays = _shape_info(_operand_type(operands[1], comp))
     if not rhs_arrays:
         return 2.0 * out_elems
     kernel_elems = _prod(rhs_arrays[0][1])
@@ -212,9 +249,9 @@ def _dus_update_bytes(
     if instr.opcode == "dynamic-update-slice":
         m = re.search(r"dynamic-update-slice\(([^)]*)\)", instr.rhs)
         if m:
-            ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+            ops = _split_operands(m.group(1))
             if len(ops) >= 2:
-                return float(_nbytes(comp.shapes.get(ops[1], "")))
+                return float(_nbytes(_operand_type(ops[1], comp)))
         return None
     if instr.opcode == "fusion":
         m = _CALLS_RE.search(instr.rhs)
@@ -227,9 +264,9 @@ def _dus_update_bytes(
             return None
         mm = re.search(r"dynamic-update-slice\(([^)]*)\)", root.rhs)
         if mm:
-            ops = [o.strip().lstrip("%") for o in mm.group(1).split(",")]
+            ops = _split_operands(mm.group(1))
             if len(ops) >= 2:
-                return float(_nbytes(callee.shapes.get(ops[1], "")))
+                return float(_nbytes(_operand_type(ops[1], callee)))
     return None
 
 
@@ -238,9 +275,8 @@ def _operand_bytes(instr: "Instruction", comp: "Computation") -> float:
     if not m:
         return 0.0
     total = 0.0
-    for op in m.group(1).split(","):
-        op = op.strip().lstrip("%")
-        total += _nbytes(comp.shapes.get(op, ""))
+    for op in _split_operands(m.group(1)):
+        total += _nbytes(_operand_type(op, comp))
     return total
 
 
@@ -356,9 +392,8 @@ def analyze(text: str) -> HloCounts:
                     m = re.search(r"\(([^)]*)\)", instr.rhs)
                     if m:
                         bts = 0
-                        for op in m.group(1).split(","):
-                            op = op.strip().lstrip("%")
-                            bts += _nbytes(comp.shapes.get(op, ""))
+                        for op in _split_operands(m.group(1)):
+                            bts += _nbytes(_operand_type(op, comp))
                         total.collective_bytes[coll] = (
                             total.collective_bytes.get(coll, 0.0) + bts
                         )

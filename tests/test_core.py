@@ -307,3 +307,61 @@ def test_bimodal_fast_mode_quantiles():
     # default (IQR-centred) view merges; the left-tail view separates
     assert res_fast.ranks["a"] == 1
     assert res_fast.ranks["b"] == 2
+
+
+# ------------------------------------------------- wall-clock timer batching -
+
+def test_wall_clock_measure_many_batches():
+    """One batch = m samples; the blocking-contract check runs once ever."""
+    from repro.core import WallClockTimer
+
+    calls = {"n": 0}
+
+    def workload():
+        calls["n"] += 1
+        return 0.0  # plain value: no block_until_ready, trivially blocking
+
+    timer = WallClockTimer({"w": workload})
+    values = timer.measure_many("w", 5)
+    assert len(values) == 5 and all(v >= 0.0 for v in values)
+    assert calls["n"] == 5
+    assert timer.measure_many("w", 0) == []
+    # the single-measure path goes through the same batch code
+    assert isinstance(timer.measure("w"), float)
+
+
+def test_wall_clock_rejects_non_blocking_workload():
+    """A workload that dispatches async and returns before the result is
+    ready must be refused loudly, not silently timed."""
+    import time as _time
+
+    from repro.core import WallClockTimer
+
+    class LazyResult:
+        def block_until_ready(self):
+            _time.sleep(0.005)  # result only materialises when blocked on
+
+    timer = WallClockTimer({"lazy": LazyResult})
+    with pytest.raises(RuntimeError, match="not blocking"):
+        timer.measure("lazy")
+
+
+def test_wall_clock_accepts_blocking_workload_with_ready_result():
+    """A workload that blocks internally and returns an already-ready
+    result (block_until_ready is then ~instant) passes the check."""
+    import time as _time
+
+    from repro.core import WallClockTimer
+
+    class ReadyResult:
+        def block_until_ready(self):
+            return self
+
+    def workload():
+        _time.sleep(0.002)  # the actual compute, inside the call
+        return ReadyResult()
+
+    timer = WallClockTimer({"ok": workload})
+    values = timer.measure_many("ok", 3)
+    assert len(values) == 3
+    assert all(v >= 0.002 for v in values)

@@ -1,0 +1,340 @@
+"""DiscriminantSweep: grid expansion, shard store, kill/resume, CLI."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.sweep import (
+    ShardStore,
+    SweepSpec,
+    census_summary,
+    merge_shards,
+    run_shard,
+    size_bucket,
+    write_merged,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+EXAMPLES = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "examples"))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS"):
+        env.setdefault(var, "1")
+    return env
+
+
+def _small_spec(**overrides):
+    kwargs = dict(
+        name="t",
+        families={
+            "chain": {"count": 6, "n_matrices": [3, 4], "lo": 24, "hi": 96},
+            "bilinear": {"sizes": [32, 64], "per_size": 2},
+        },
+        n_shards=3,
+        backend="cost_model",
+        max_measurements=9,
+        chunk_size=2,
+        save_every=4,
+    )
+    kwargs.update(overrides)
+    return SweepSpec(**kwargs)
+
+
+# ------------------------------------------------------------- expansion ---
+
+def test_expand_deterministic_unique_and_sharded():
+    spec = _small_spec()
+    a, b = spec.expand(), spec.expand()
+    assert [i.to_dict() for i in a] == [i.to_dict() for i in b]
+    uids = [i.uid for i in a]
+    assert len(set(uids)) == len(uids) == 10
+    assert [i.index for i in a] == list(range(10))
+    # shards partition the grid
+    seen = []
+    for s in range(spec.n_shards):
+        seen += [i.uid for i in spec.shard_instances(s)]
+    assert sorted(seen) == sorted(uids)
+
+
+def test_spec_roundtrips_through_json(tmp_path):
+    spec = _small_spec()
+    path = spec.save(str(tmp_path / "spec.json"))
+    loaded = SweepSpec.load(path)
+    assert loaded.to_dict() == spec.to_dict()
+    assert [i.uid for i in loaded.expand()] == [i.uid for i in spec.expand()]
+
+
+def test_spec_rejects_unknown_family_and_backend():
+    with pytest.raises(ValueError):
+        SweepSpec(families={"nope": {}})
+    with pytest.raises(ValueError):
+        SweepSpec(backend="telepathy")
+
+
+def test_expand_rejects_duplicate_uids():
+    spec = SweepSpec(families={"bilinear": {"sizes": [64, 64], "per_size": 1}})
+    with pytest.raises(ValueError, match="duplicate instance uids"):
+        spec.expand()
+
+
+def test_size_bucket():
+    assert size_bucket(32) == "[32, 64)"
+    assert size_bucket(63) == "[32, 64)"
+    assert size_bucket(64) == "[64, 128)"
+
+
+# ------------------------------------------------------------ shard store ---
+
+def test_store_recovers_torn_tail(tmp_path):
+    store = ShardStore(str(tmp_path), 0).open()
+    store.append_records([{"uid": "a", "index": 0}, {"uid": "b", "index": 1}])
+    # simulate a SIGKILL mid-append: half a JSON line, no newline
+    with open(store.records_path, "a") as fh:
+        fh.write('{"uid": "c", "ind')
+    reopened = ShardStore(str(tmp_path), 0).open()
+    assert reopened.completed_uids() == ["a", "b"]
+    # the torn bytes are gone: appending c again works cleanly
+    reopened.append_records([{"uid": "c", "index": 2}])
+    final = ShardStore(str(tmp_path), 0).open()
+    assert final.completed_uids() == ["a", "b", "c"]
+    for line in open(store.records_path):
+        json.loads(line)
+
+
+def test_store_append_skips_duplicates(tmp_path):
+    store = ShardStore(str(tmp_path), 1).open()
+    assert store.append_records([{"uid": "x", "index": 0}]) == 1
+    assert store.append_records([{"uid": "x", "index": 0},
+                                 {"uid": "y", "index": 1}]) == 1
+    assert store.completed_uids() == ["x", "y"]
+
+
+# ------------------------------------------------------- run_shard/resume ---
+
+def test_run_shard_completes_and_is_idempotent(tmp_path):
+    spec = _small_spec()
+    root = str(tmp_path)
+    for s in range(spec.n_shards):
+        run_shard(spec, root, s)
+    records = merge_shards(spec, root)
+    assert [r["uid"] for r in records] == [i.uid for i in spec.expand()]
+    assert all(not ShardStore(root, s).has_engine_state()
+               for s in range(spec.n_shards))
+    before = open(os.path.join(root, "shard-0000.jsonl")).read()
+    run_shard(spec, root, 0)  # no-op: everything already recorded
+    assert open(os.path.join(root, "shard-0000.jsonl")).read() == before
+
+
+def test_interrupted_resume_is_bit_identical(tmp_path):
+    spec = _small_spec()
+    straight, chopped = str(tmp_path / "a"), str(tmp_path / "b")
+    run_shard(spec, straight, 0)
+    # drive the same shard in 3-step slices, pausing mid-chunk repeatedly
+    for _ in range(100):
+        run_shard(spec, chopped, 0, max_steps=3)
+        manifest = os.path.join(chopped, "shard-0000.manifest.json")
+        if (os.path.exists(manifest)
+                and json.load(open(manifest)).get("done")):
+            break
+    else:
+        pytest.fail("shard did not finish in 100 slices")
+    assert (open(os.path.join(chopped, "shard-0000.jsonl")).read()
+            == open(os.path.join(straight, "shard-0000.jsonl")).read())
+
+
+def test_records_hold_only_deterministic_fields(tmp_path):
+    spec = _small_spec()
+    run_shard(spec, str(tmp_path), 0)
+    rec = ShardStore(str(tmp_path), 0).open().records[0]
+    assert {"uid", "index", "family", "size", "p", "is_anomaly", "reason",
+            "ranks", "mean_ranks", "converged"} <= set(rec)
+    # nothing time- or host-dependent may leak into the census
+    assert not any("time" in k or "host" in k or "wall" in k for k in rec)
+
+
+def test_wall_clock_backend_resumes_mid_chunk(tmp_path):
+    spec = _small_spec(
+        backend="wall_clock",
+        families={"chain": {"count": 2, "n_matrices": [3], "lo": 8, "hi": 24}},
+        n_shards=1,
+        chunk_size=2,
+        max_measurements=6,
+        eps=-1.0,  # never converges: each session needs exactly 2 steps,
+                   # so max_steps=3 pauses mid-chunk deterministically
+    )
+    root = str(tmp_path)
+    run_shard(spec, root, 0, max_steps=3)   # pause mid-chunk
+    store = ShardStore(root, 0)
+    assert store.has_engine_state()
+    run_shard(spec, root, 0)                # rebuilds workloads, finishes
+    assert not ShardStore(root, 0).has_engine_state()
+    assert len(ShardStore(root, 0).open().records) == 2
+
+
+# ---------------------------------------------------------- merge / report ---
+
+def test_merge_dedupes_across_shards(tmp_path):
+    spec = _small_spec(n_shards=2)
+    root = str(tmp_path)
+    rec = {"uid": "dup", "index": 0, "is_anomaly": False}
+    ShardStore(root, 0).open().append_records([rec])
+    ShardStore(root, 1).open().append_records(
+        [dict(rec, is_anomaly=True), {"uid": "solo", "index": 1}]
+    )
+    merged = merge_shards(spec, root)
+    assert [r["uid"] for r in merged] == ["dup", "solo"]
+    assert merged[0]["is_anomaly"] is False  # first occurrence wins
+
+
+def test_census_summary_and_tables(tmp_path):
+    spec = _small_spec()
+    root = str(tmp_path)
+    for s in range(spec.n_shards):
+        run_shard(spec, root, s)
+    records = merge_shards(spec, root)
+    summary = census_summary(records)
+    assert summary["total"]["n"] == len(records)
+    assert set(summary["by_family"]) == {"chain", "bilinear"}
+    rate = summary["total"]["rate"]
+    assert 0.0 <= rate <= 1.0
+
+    from repro.launch.report_md import census_tables
+
+    md = census_tables(records, name="t")
+    assert "anomaly rate" in md and "| family |" in md.replace("| family ", "| family ")
+    assert "chain" in md and "bilinear" in md
+
+    path = write_merged(spec, root)
+    assert sum(1 for _ in open(path)) == len(records)
+
+
+# -------------------------------------------------------- CLI + kill/resume ---
+
+#: Grid sized so a mid-run SIGKILL lands while shards are in flight: ~40
+#: instances of tens of ms each, small chunks, frequent engine saves.
+CLI_GRID = [
+    "--chains", "32", "--chain-sizes", "4,5", "--lo", "24", "--hi", "160",
+    "--families", "bilinear", "--sizes", "32,64", "--per-size", "4",
+    "--shards", "4", "--max-measurements", "12",
+    "--chunk-size", "2", "--save-every", "4",
+]
+
+
+def _sweep_cli(args, **kwargs):
+    cmd = [sys.executable, "-m", "repro.launch.sweep"] + args
+    return subprocess.run(
+        cmd, env=_env(), capture_output=True, text=True, timeout=300, **kwargs
+    )
+
+
+def test_cli_kill_resume_census_identical(tmp_path):
+    """The acceptance scenario: multi-worker sweep, SIGKILL mid-shard,
+    resume, merged census identical to an uninterrupted run."""
+    straight, killed = str(tmp_path / "straight"), str(tmp_path / "killed")
+
+    done = _sweep_cli(["run", "--out", straight, "--workers", "2"] + CLI_GRID)
+    assert done.returncode == 0, done.stderr
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.sweep", "run",
+         "--out", killed, "--workers", "2"] + CLI_GRID,
+        env=_env(), start_new_session=True,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+    try:
+        # wait until at least one record batch hit disk, then SIGKILL the
+        # whole process group (parent + both workers) mid-census
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            jsonls = [f for f in os.listdir(killed)
+                      if f.endswith(".jsonl")] if os.path.isdir(killed) else []
+            if any(os.path.getsize(os.path.join(killed, f)) > 0 for f in jsonls):
+                break
+            time.sleep(0.005)
+        was_running = proc.poll() is None
+        os.killpg(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    assert was_running, "sweep finished before the kill; enlarge CLI_GRID"
+
+    resumed = _sweep_cli(["run", "--out", killed, "--workers", "2"])
+    assert resumed.returncode == 0, resumed.stderr
+
+    merged_straight = open(os.path.join(straight, "merged.jsonl")).read()
+    merged_killed = open(os.path.join(killed, "merged.jsonl")).read()
+    assert merged_killed == merged_straight
+    assert merged_straight.count("\n") == 40  # 32 chains + 8 bilinear
+
+    report = _sweep_cli(["report", "--out", killed])
+    assert report.returncode == 0, report.stderr
+    assert "anomaly rate" in report.stdout
+    assert "| family |" in report.stdout or "By expression family" in report.stdout
+
+
+def test_cli_status_and_merge(tmp_path):
+    out = str(tmp_path / "census")
+    run = _sweep_cli([
+        "run", "--out", out, "--workers", "2",
+        "--chains", "4", "--chain-sizes", "3", "--families", "",
+        "--shards", "2", "--max-measurements", "6",
+    ])
+    assert run.returncode == 0, run.stderr
+    status = _sweep_cli(["status", "--out", out])
+    assert "4/4 instances complete" in status.stdout
+    merge = _sweep_cli(["merge", "--out", out])
+    assert merge.returncode == 0 and "merged 4 records" in merge.stdout
+
+
+def test_plan_force_removes_stale_shard_artifacts(tmp_path):
+    """Re-planning must not let records measured under the old grid satisfy
+    the new one (uids encode family/n/index, not the grid bounds)."""
+    out = str(tmp_path / "census")
+    base = ["--chains", "4", "--chain-sizes", "3", "--families", "",
+            "--shards", "2", "--max-measurements", "6"]
+    first = _sweep_cli(["run", "--out", out, "--workers", "1"] + base)
+    assert first.returncode == 0, first.stderr
+    old_merged = open(os.path.join(out, "merged.jsonl")).read()
+
+    replan = _sweep_cli(["plan", "--out", out, "--force"] + base[:-2]
+                        + ["--lo", "200", "--hi", "400",
+                           "--max-measurements", "6"])
+    assert replan.returncode == 0, replan.stderr
+    assert "stale" in replan.stdout
+    assert not [f for f in os.listdir(out) if f.endswith(".jsonl")]
+
+    rerun = _sweep_cli(["run", "--out", out, "--workers", "1"])
+    assert rerun.returncode == 0, rerun.stderr
+    new_merged = open(os.path.join(out, "merged.jsonl")).read()
+    assert new_merged != old_merged
+    assert all(d >= 200 for r in new_merged.splitlines()
+               for d in json.loads(r)["dims"])
+
+
+def test_anomaly_hunt_delegates_to_sweep_subsystem(tmp_path):
+    """examples/anomaly_hunt.py is a thin wrapper over the census: its
+    state directory must be a real one-shard sweep store."""
+    out = str(tmp_path / "hunt")
+    script = os.path.join(EXAMPLES, "anomaly_hunt.py")
+    proc = subprocess.run(
+        [sys.executable, script, "--n", "3", "--chain", "3",
+         "--lo", "16", "--hi", "48", "--backend", "cost_model", "--out", out],
+        env=_env(), capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "anomaly rate:" in proc.stdout
+    # the subsystem's shard layout, not an ad-hoc loop
+    assert os.path.exists(os.path.join(out, "spec.json"))
+    store = ShardStore(out, 0).open()
+    assert len(store.records) == 3
+    spec = SweepSpec.load(os.path.join(out, "spec.json"))
+    assert spec.families["chain"]["count"] == 3
