@@ -1,0 +1,110 @@
+"""AnomalyExplainer throughput — explanations/minute, single- vs
+multi-worker.
+
+The explain subsystem's job is to turn a census's anomaly list into cause
+tables as a matter of machine time, so the number that matters is
+explanations/minute and how it scales with worker processes. This module
+builds ONE deterministic cost-model census sized to yield on the order of
+100 anomalies (eff_sigma cranked up so equal-FLOPs families split often),
+then runs the SAME explanation campaign through
+``python -m repro.launch.explain run`` with 1 worker and with N workers
+(fresh state directories, subprocess workers — the real deployment path).
+The two runs also cross-check the subsystem's determinism: the merged
+explanation files must be byte-identical regardless of worker count.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import List
+
+
+def _census_flags(smoke: bool) -> List[str]:
+    if smoke:
+        return [
+            "--chains", "48", "--chain-sizes", "3,4",
+            "--families", "bilinear", "--sizes", "32,64", "--per-size", "6",
+            "--shards", "4", "--eff-sigma", "0.3", "--noise-sigma", "0.01",
+            "--max-measurements", "9",
+        ]
+    return [
+        "--chains", "320", "--chain-sizes", "4,5",
+        "--families", "bilinear,gram", "--sizes", "48,64,96,128",
+        "--per-size", "16", "--shards", "8",
+        "--eff-sigma", "0.3", "--noise-sigma", "0.01",
+        "--max-measurements", "12",
+    ]
+
+
+#: eps < 0 never converges: every explanation runs its full measurement
+#: budget, so the benchmark measures a fixed, comparable amount of work
+#: (sized so campaign work dominates worker startup even on a small box).
+def _explain_flags(smoke: bool) -> List[str]:
+    budget = "18" if smoke else "60"
+    return ["--eps", "-1.0", "--max-measurements", budget,
+            "--shards", "8", "--chunk-size", "4"]
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    env["PYTHONPATH"] = os.pathsep.join(dict.fromkeys(parts))
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
+        env.setdefault(var, "1")
+    return env
+
+
+def _run(cmd: List[str]) -> float:
+    t0 = time.time()
+    proc = subprocess.run(cmd, env=_env(), capture_output=True, text=True)
+    elapsed = time.time() - t0
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"{' '.join(cmd[:4])} failed ({proc.returncode}): "
+            f"{proc.stderr[-500:]}"
+        )
+    return elapsed
+
+
+def run(smoke: bool, out: List[str], ctx=None) -> None:
+    # explanations are light relative to worker startup, so oversubscribing
+    # a small box hides the scaling — pin the fleet to real cores
+    multi = 2 if smoke else max(2, min(4, os.cpu_count() or 4))
+    with tempfile.TemporaryDirectory(prefix="bench_explain_") as tmp:
+        census = os.path.join(tmp, "census")
+        _run([sys.executable, "-m", "repro.launch.sweep", "run",
+              "--out", census, "--workers", str(multi)] + _census_flags(smoke))
+
+        single_dir = os.path.join(tmp, "ex_w1")
+        multi_dir = os.path.join(tmp, f"ex_w{multi}")
+        base = [sys.executable, "-m", "repro.launch.explain", "run",
+                "--census", census] + _explain_flags(smoke)
+        t_single = _run(base + ["--out", single_dir, "--workers", "1"])
+        t_multi = _run(base + ["--out", multi_dir, "--workers", str(multi)])
+
+        merged_single = open(os.path.join(single_dir, "merged.jsonl")).read()
+        merged_multi = open(os.path.join(multi_dir, "merged.jsonl")).read()
+        if merged_single != merged_multi:
+            raise AssertionError(
+                "explanations differ between 1-worker and multi-worker runs"
+            )
+        n = merged_single.count("\n")
+        if n == 0:
+            raise AssertionError("census produced no anomalies to explain")
+
+    epm_single = n / t_single * 60.0
+    epm_multi = n / t_multi * 60.0
+    out.append(
+        f"explain.1worker,{t_single / n * 1e6:.0f},"
+        f"{n} anomalies in {t_single:.1f}s = {epm_single:.0f} explanations/min"
+    )
+    out.append(
+        f"explain.{multi}workers,{t_multi / n * 1e6:.0f},"
+        f"{n} anomalies in {t_multi:.1f}s = {epm_multi:.0f} explanations/min; "
+        f"speedup=x{t_single / t_multi:.2f}; explanations byte-identical"
+    )

@@ -25,6 +25,7 @@ Modules:
   variants     — beyond-paper: framework variant sites + expression families
   roofline     — §Roofline table from the dry-run reports
   sweep        — DiscriminantSweep census throughput, 1 vs N workers
+  explain      — AnomalyExplainer throughput, 1 vs N workers
 """
 
 from __future__ import annotations
@@ -37,6 +38,7 @@ import time
 from typing import Any, Dict, List
 
 from . import (
+    bench_explain,
     bench_large_chain,
     bench_paper_tables,
     bench_rank_scaling,
@@ -55,6 +57,7 @@ MODULES = {
     "rank_scaling": bench_rank_scaling.run,
     "roofline": bench_roofline.run,
     "sweep": bench_sweep.run,
+    "explain": bench_explain.run,
 }
 
 

@@ -241,6 +241,22 @@ def _instance_entropy(spec: SweepSpec, inst: InstanceSpec, stream: int) -> List[
     return [int(spec.base_seed), int(inst.index), int(stream)]
 
 
+def synthetic_efficiencies(
+    names: Iterable[str],
+    rng: np.random.Generator,
+    eff_sigma: float,
+) -> Dict[str, float]:
+    """The synthetic machine's frozen per-algorithm lognormal efficiency
+    factors, drawn in sorted-name order (the reproducibility contract: any
+    consumer that replays the same RNG over the same names recovers the
+    same factors — the AnomalyExplainer uses this to reconstruct the
+    injected ground truth without touching the census timers)."""
+    return {
+        name: math.exp(float(rng.normal(0.0, eff_sigma)))
+        for name in sorted(names)
+    }
+
+
 def synthetic_costs(
     flops: Mapping[str, float],
     rng: np.random.Generator,
@@ -254,17 +270,20 @@ def synthetic_costs(
     part of the *machine*, not the measurement noise: it is drawn once per
     instance (in sorted algorithm order, so it is reproducible) and held
     fixed across all measurements."""
-    costs: Dict[str, float] = {}
-    for name in sorted(flops):
-        eff = math.exp(float(rng.normal(0.0, eff_sigma)))
-        costs[name] = float(flops[name]) / flop_rate * eff
-    return costs
+    eff = synthetic_efficiencies(flops, rng, eff_sigma)
+    return {
+        name: float(flops[name]) / flop_rate * eff[name]
+        for name in sorted(flops)
+    }
 
 
 def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
     """(flops table, descriptive meta, workload-builder thunk) for a chain
     instance. Expression generators are imported lazily so cost-model
-    workers never build a single jax array."""
+    workers never build a single jax array. ``meta["kernels"]`` carries the
+    per-algorithm kernel decomposition (computed here, where the enumerated
+    algorithms already exist) — the AnomalyExplainer's rebuild pointer."""
+    from repro.explain.decompose import decompose_chain, kernels_to_compact
     from repro.expressions.chain import flops_table
     from repro.expressions.instances import random_instance
 
@@ -276,6 +295,9 @@ def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], 
     flops = flops_table(algs)
     dims = list(chain.dims)
     size = int(round(float(np.exp(np.mean(np.log(dims))))))  # geometric mean
+    kernels = kernels_to_compact(
+        {a.name: decompose_chain(dims, a.steps) for a in algs}
+    )
 
     def build_workloads() -> Dict[str, Callable[[], Any]]:
         from repro.expressions.algorithms import build_workloads as bw
@@ -284,22 +306,24 @@ def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], 
         mats = make_chain_inputs(chain.dims, seed=int(p["seed"]))
         return bw(algs, mats, warmup=True)
 
-    meta = {"size": size, "dims": dims}
+    meta = {"size": size, "dims": dims, "kernels": kernels}
     return flops, meta, build_workloads
 
 
 def _generalized_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
+    from repro.explain.decompose import decompose_generalized, kernels_to_compact
     from repro.expressions.generalized import FAMILIES as GEN
 
     p = inst.params
     size = int(p["size"])
     family = GEN[inst.family](n=size)
     flops = family.flops_table()
+    kernels = kernels_to_compact(decompose_generalized(inst.family, size))
 
     def build_workloads() -> Dict[str, Callable[[], Any]]:
         return family.workloads(size, seed=int(p["seed"]), warmup=True)
 
-    meta = {"size": size, "dims": None}
+    meta = {"size": size, "dims": None, "kernels": kernels}
     return flops, meta, build_workloads
 
 
@@ -366,9 +390,12 @@ def build_sweep_session(spec: SweepSpec, inst: InstanceSpec) -> MeasurementSessi
             "family": inst.family,
             "size": desc["size"],
             "dims": desc["dims"],
+            "params": dict(inst.params),
             "flops": {k: float(v) for k, v in flops.items()},
+            "kernels": desc["kernels"],
             "dropped": list(cand.dropped),
             "backend": spec.backend,
+            "base_seed": spec.base_seed,
         },
     )
 
@@ -378,7 +405,13 @@ def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[st
 
     Deliberately contains *only* deterministic fields — no wall times, no
     hostnames — so an interrupted-and-resumed sweep merges byte-identical
-    to an uninterrupted one (the kill/resume tests diff the files)."""
+    to an uninterrupted one (the kill/resume tests diff the files).
+
+    The ``params`` / ``flops`` / ``kernels`` / ``base_seed`` fields are the
+    AnomalyExplainer's pointers: together they rebuild the instance — its
+    algorithms, kernel segments, and (for the deterministic backends) the
+    synthetic machine's injected efficiency factors — without re-expanding
+    the grid or re-running any census measurement."""
     meta = session.meta
     ranking = session.result(measure_if_needed=False)
     disc = flops_discriminant_test(
@@ -391,6 +424,10 @@ def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[st
         "family": meta["family"],
         "size": meta["size"],
         "dims": meta["dims"],
+        "params": dict(meta.get("params", {})),
+        "flops": {k: float(v) for k, v in meta["flops"].items()},
+        "kernels": meta.get("kernels", {}),
+        "base_seed": int(meta.get("base_seed", spec.base_seed)),
         "backend": meta.get("backend", spec.backend),
         "p": len(ranking.sequence),
         "n_dropped": len(meta.get("dropped", ())),
@@ -544,6 +581,96 @@ def _wall_clock_timers(
     return timers
 
 
+def run_chunked_campaign(
+    store: ShardStore,
+    todo_uids: Sequence[str],
+    build_session: Callable[[str], MeasurementSession],
+    record_fn: Callable[[MeasurementSession], Dict[str, Any]],
+    *,
+    chunk_size: int,
+    save_every: int,
+    policy: str = "least_converged_first",
+    rebuild_timers: Optional[Callable[[Sequence[str]], Dict[str, Timer]]] = None,
+    max_steps: Optional[int] = None,
+    progress: Optional[Callable[[str], None]] = None,
+    label: str = "shard",
+) -> bool:
+    """The shared chunk/resume/save/append driver behind every sharded
+    campaign (census shards AND anomaly explanations — one copy of the
+    kill/resume state machine, not one per subsystem).
+
+    ``todo_uids`` (minus the store's completed set) is processed in chunks
+    of ``chunk_size``; each chunk is one interleaved
+    :class:`~repro.core.engine.ExperimentEngine` campaign built by
+    ``build_session(uid)``. Engine state persists every ``save_every``
+    steps and at every chunk boundary; a completed chunk appends
+    ``record_fn(session)`` rows to the store's JSONL and drops the engine
+    state. Any kill point therefore resumes losing at most ``save_every``
+    engine steps of *work* and zero steps of *determinism* (serialized
+    timer RNG state replays the lost steps bit-identically for the
+    cost_model / simulated backends). ``rebuild_timers`` re-attaches
+    non-serializable (wall-clock) backends on resume. Returns True when
+    every uid completed, False when paused on the ``max_steps`` budget.
+    """
+    say = progress or (lambda msg: None)
+    completed = set(store.completed_uids())
+    total = len(todo_uids)
+    todo = [u for u in todo_uids if u not in completed]
+    steps_left = max_steps
+
+    while True:
+        engine: Optional[ExperimentEngine] = None
+        if store.has_engine_state():
+            timers = None
+            if rebuild_timers is not None:
+                with open(store.engine_path) as fh:
+                    names = [s["name"] for s in json.load(fh)["sessions"]]
+                timers = rebuild_timers(names)
+            engine = ExperimentEngine.load(store.engine_path, timers=timers)
+            chunk_uids = engine.session_names
+            if all(uid in completed for uid in chunk_uids):
+                # killed between record append and state cleanup
+                store.clear_engine_state()
+                continue
+            say(f"{label}: resuming chunk of {len(chunk_uids)}")
+        else:
+            chunk = todo[:chunk_size]
+            if not chunk:
+                break
+            engine = ExperimentEngine(policy=policy)
+            for uid in chunk:
+                engine.add_session(build_session(uid))
+            engine.save(store.engine_path)
+            chunk_uids = engine.session_names
+            say(f"{label}: new chunk of {len(chunk)} "
+                f"({len(completed)}/{total} done)")
+
+        since_save = 0
+        while not engine.done:
+            if steps_left is not None and steps_left <= 0:
+                engine.save(store.engine_path)
+                say(f"{label}: paused (step budget)")
+                return False
+            if engine.step() is None:
+                break
+            since_save += 1
+            if steps_left is not None:
+                steps_left -= 1
+            if since_save >= save_every:
+                engine.save(store.engine_path)
+                since_save = 0
+
+        records = [record_fn(engine.session(uid)) for uid in chunk_uids]
+        store.append_records(records)
+        store.clear_engine_state()
+        completed.update(chunk_uids)
+        todo = [u for u in todo if u not in completed]
+
+    store.write_manifest(done=True)
+    say(f"{label}: done ({len(completed)}/{total})")
+    return True
+
+
 def run_shard(
     spec: SweepSpec,
     root: str,
@@ -552,80 +679,30 @@ def run_shard(
     max_steps: Optional[int] = None,
     progress: Optional[Callable[[str], None]] = None,
 ) -> ShardStore:
-    """Run (or resume) one shard of the census to completion.
-
-    The shard's instances are processed in chunks of ``spec.chunk_size``;
-    each chunk is one interleaved :class:`ExperimentEngine` campaign. The
-    engine state is persisted every ``spec.save_every`` steps and at every
-    chunk boundary; completed chunks append their records to the shard's
-    JSONL and drop the engine state. Any kill point therefore resumes
-    losing at most ``save_every`` engine steps of *work* and zero steps of
-    *determinism*: the serialized timer RNG state replays the lost steps
-    bit-identically (cost_model / simulated backends).
-
-    ``max_steps`` bounds the number of engine steps this call takes (the
-    shard is left resumable mid-chunk) — used by tests and deadline-driven
-    callers.
+    """Run (or resume) one shard of the census to completion — the census
+    instantiation of :func:`run_chunked_campaign` (see there for the
+    persistence/resume contract). ``max_steps`` bounds the engine steps
+    this call takes (the shard is left resumable mid-chunk) — used by
+    tests and deadline-driven callers.
     """
-    say = progress or (lambda msg: None)
     store = ShardStore(root, shard, fsync=spec.fsync).open()
     instances = {i.uid: i for i in spec.shard_instances(shard)}
-    completed = set(store.completed_uids())
-    todo = [i for i in spec.shard_instances(shard) if i.uid not in completed]
-    steps_left = max_steps
-
-    while True:
-        engine: Optional[ExperimentEngine] = None
-        if store.has_engine_state():
-            timers = None
-            if spec.backend == "wall_clock":
-                with open(store.engine_path) as fh:
-                    names = [s["name"] for s in json.load(fh)["sessions"]]
-                timers = _wall_clock_timers(spec, instances, names)
-            engine = ExperimentEngine.load(store.engine_path, timers=timers)
-            chunk_uids = engine.session_names
-            if all(uid in completed for uid in chunk_uids):
-                # killed between record append and state cleanup
-                store.clear_engine_state()
-                continue
-            say(f"shard {shard}: resuming chunk of {len(chunk_uids)}")
-        else:
-            chunk = todo[: spec.chunk_size]
-            if not chunk:
-                break
-            engine = ExperimentEngine(policy=spec.policy)
-            for inst in chunk:
-                engine.add_session(build_sweep_session(spec, inst))
-            engine.save(store.engine_path)
-            chunk_uids = engine.session_names
-            say(f"shard {shard}: new chunk of {len(chunk)} "
-                f"({len(completed)}/{len(instances)} done)")
-
-        since_save = 0
-        while not engine.done:
-            if steps_left is not None and steps_left <= 0:
-                engine.save(store.engine_path)
-                say(f"shard {shard}: paused (step budget)")
-                return store
-            if engine.step() is None:
-                break
-            since_save += 1
-            if steps_left is not None:
-                steps_left -= 1
-            if since_save >= spec.save_every:
-                engine.save(store.engine_path)
-                since_save = 0
-
-        records = [
-            record_from_session(engine.session(uid), spec) for uid in chunk_uids
-        ]
-        store.append_records(records)
-        store.clear_engine_state()
-        completed.update(chunk_uids)
-        todo = [i for i in todo if i.uid not in completed]
-
-    store.write_manifest(done=True)
-    say(f"shard {shard}: done ({len(completed)}/{len(instances)})")
+    rebuild = None
+    if spec.backend == "wall_clock":
+        rebuild = lambda uids: _wall_clock_timers(spec, instances, uids)
+    run_chunked_campaign(
+        store,
+        list(instances),
+        lambda uid: build_sweep_session(spec, instances[uid]),
+        lambda session: record_from_session(session, spec),
+        chunk_size=spec.chunk_size,
+        save_every=spec.save_every,
+        policy=spec.policy,
+        rebuild_timers=rebuild,
+        max_steps=max_steps,
+        progress=progress,
+        label=f"shard {shard}",
+    )
     return store
 
 
@@ -710,24 +787,42 @@ def census_summary(records: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
 
 
 def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
-    """Completed / total per shard (the ``plan``/``run`` status line)."""
+    """Completed / total per shard, plus running anomaly tallies per family
+    (the ``plan``/``run``/``status`` lines). A long census surfaces its
+    anomaly landscape here, before any ``merge`` — the explain subsystem's
+    "is there anything to explain yet" probe."""
     per_shard = []
     total_done = 0
+    anomalies = 0
+    per_family: Dict[str, Dict[str, int]] = {}
     for shard in range(spec.n_shards):
         n_total = len(spec.shard_instances(shard))
         store = ShardStore(root, shard)
         n_done = 0
+        shard_anom = 0
         if os.path.exists(store.records_path):
-            n_done = len(store.open(readonly=True).completed_uids())
+            records = store.open(readonly=True).records
+            n_done = len(records)
+            for r in records:
+                fam = per_family.setdefault(
+                    r.get("family", "?"), {"done": 0, "anomalies": 0}
+                )
+                fam["done"] += 1
+                if r.get("is_anomaly"):
+                    fam["anomalies"] += 1
+                    shard_anom += 1
         in_flight = os.path.exists(store.engine_path)
         per_shard.append({
             "shard": shard, "done": n_done, "total": n_total,
-            "in_flight_chunk": in_flight,
+            "anomalies": shard_anom, "in_flight_chunk": in_flight,
         })
         total_done += n_done
+        anomalies += shard_anom
     return {
         "name": spec.name,
         "instances": len(spec.expand()),
         "completed": total_done,
+        "anomalies": anomalies,
+        "by_family": per_family,
         "shards": per_shard,
     }

@@ -1,0 +1,61 @@
+"""repro.explain — AnomalyExplainer: root-cause attribution for census
+anomalies.
+
+The paper stops at *detecting* anomalies ("an anomaly ... can then be used
+in the investigation of the root cause of performance differences"); this
+package performs that investigation, ELAPS-style, by decomposing each
+algorithm into its kernel sequence and reconciling measured segment times
+against a per-kernel roofline floor:
+
+* :mod:`repro.explain.decompose` — algorithm -> kernel sequence
+  (GEMM/GEMV/SYRK/solve calls with shapes, exact analytic FLOPs/bytes),
+  plus isolated-kernel JAX workloads for wall-clock re-measurement.
+* :mod:`repro.explain.attribution` — per-kernel efficiency factors: median
+  measured segment time over the :class:`~repro.roofline.MachineSpec`
+  roofline prediction, rolled up into whole-algorithm attributions with a
+  dispatch/overhead residual.
+* :mod:`repro.explain.classify` — the cause taxonomy
+  (``shape_kernel_efficiency`` / ``memory_bound_segment`` /
+  ``dispatch_overhead`` / ``unexplained``) with a numeric evidence score:
+  the fraction of the winner/loser time gap the chosen cause explains.
+* :mod:`repro.explain.runner` — :class:`ExplainSpec` + sharded, resumable
+  explanation campaigns on the :class:`~repro.core.engine.ExperimentEngine`
+  (kill/resume byte-identical for the deterministic census backends),
+  mirroring the DiscriminantSweep layout. CLI:
+  ``python -m repro.launch.explain``.
+
+Everything imports without jax (kernel workloads build lazily), so
+cost-model explanation workers stay as light as census workers.
+"""
+
+from .attribution import AlgorithmAttribution, KernelAttribution, attribute_algorithm
+from .classify import CAUSES, Explanation, classify_anomaly
+from .decompose import KernelSpec, decompose_instance, kernels_from_record
+from .runner import (
+    ExplainSpec,
+    build_explain_session,
+    explain_progress,
+    explain_summary,
+    explain_targets,
+    merge_explained,
+    run_explain_shard,
+)
+
+__all__ = [
+    "AlgorithmAttribution",
+    "CAUSES",
+    "Explanation",
+    "ExplainSpec",
+    "KernelAttribution",
+    "KernelSpec",
+    "attribute_algorithm",
+    "build_explain_session",
+    "classify_anomaly",
+    "decompose_instance",
+    "explain_progress",
+    "explain_summary",
+    "explain_targets",
+    "kernels_from_record",
+    "merge_explained",
+    "run_explain_shard",
+]

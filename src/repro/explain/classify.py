@@ -1,0 +1,182 @@
+"""Cause taxonomy: turn a winner/loser attribution pair into a ranked,
+evidence-backed explanation.
+
+An anomaly always has a *winner* (the best-ranked algorithm overall) and a
+*loser* (the minimum-FLOPs algorithm that should have won — or, for an
+``S_F``-split anomaly, the ``S_F`` member stranded in the worse class).
+The time gap between them decomposes exactly:
+
+    gap = (t_loser - t_winner)
+        =   d_roofline   (different hardware floors: FLOP/byte counts)
+          + d_excess     (kernel-level efficiency differences)
+          + d_residual   (dispatch / between-kernel overhead differences)
+
+The cause is the dominant component, refined by *which* kernel carries it:
+
+``shape_kernel_efficiency``
+    Kernel excess dominates and the offending kernel is compute-bound —
+    the same mathematical operation runs at shape-dependent efficiency
+    (the cache/blocking effects the paper attributes anomalies to).
+``memory_bound_segment``
+    Kernel excess dominates but the offending kernel sits on the memory
+    roof — the losing algorithm streams more bytes than it computes.
+``dispatch_overhead``
+    The residual dominates: the loser pays for more (or slower) kernel
+    dispatches than the winner, not for slower kernels.
+``unexplained``
+    No component reaches the evidence threshold; the taxonomy cannot
+    (yet) name the cause — these rows seed the ROADMAP's open questions.
+
+The evidence score is the fraction of the gap the chosen component
+explains, clamped to [0, 1].
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from .attribution import AlgorithmAttribution, KernelAttribution
+
+#: The taxonomy, in reporting order.
+CAUSES = (
+    "shape_kernel_efficiency",
+    "memory_bound_segment",
+    "dispatch_overhead",
+    "unexplained",
+)
+
+
+@dataclass(frozen=True)
+class Explanation:
+    """One anomaly, explained (or honestly not)."""
+
+    uid: str
+    reason: str                      # the census anomaly reason
+    cause: str                       # one of CAUSES
+    evidence: float                  # fraction of the gap explained, [0, 1]
+    winner: str
+    loser: str
+    gap: float                       # t_loser - t_winner (seconds)
+    gap_rel: float                   # gap / t_winner
+    offending_algorithm: Optional[str]
+    offending_kernel: Optional[str]  # KernelSpec.label
+    components: Dict[str, float] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "uid": self.uid,
+            "reason": self.reason,
+            "cause": self.cause,
+            "evidence": self.evidence,
+            "winner": self.winner,
+            "loser": self.loser,
+            "gap": self.gap,
+            "gap_rel": self.gap_rel,
+            "offending_algorithm": self.offending_algorithm,
+            "offending_kernel": self.offending_kernel,
+            "components": dict(self.components),
+        }
+
+
+def pick_winner_loser(record: Mapping[str, Any]) -> Tuple[str, str]:
+    """(winner, loser) algorithm names for one census anomaly record.
+
+    Winner: best rank overall, ties broken by mean rank then name. Loser:
+    for ``faster_outside_min_flops`` the best-ranked ``S_F`` member (the
+    strongest representative that still lost); for ``min_flops_split`` the
+    worst-ranked ``S_F`` member (the one you must not pick at random).
+    Deterministic — the explain campaign's work list derives from it.
+    """
+    ranks: Dict[str, int] = {k: int(v) for k, v in record["ranks"].items()}
+    means: Dict[str, float] = {k: float(v) for k, v in record["mean_ranks"].items()}
+    sf = [n for n in record["min_flops_algs"] if n in ranks]
+    if not sf:
+        raise ValueError(f"record {record.get('uid')!r} has no ranked S_F member")
+
+    def key(name: str) -> Tuple[int, float, str]:
+        return (ranks[name], means.get(name, float("inf")), name)
+
+    winner = min(ranks, key=key)
+    if record.get("reason") == "min_flops_split":
+        loser = max(sf, key=key)
+    else:
+        loser = min(sf, key=key)
+    if loser == winner:
+        # S_F's best IS the overall winner: nothing lost, nothing to
+        # explain. Anomaly records can never reach here (reason 1 puts the
+        # winner outside S_F; reason 2 splits S_F across classes).
+        raise ValueError(
+            f"record {record.get('uid')!r} (reason "
+            f"{record.get('reason')!r}) has no winner/loser gap to explain"
+        )
+    return winner, loser
+
+
+def _offending(
+    winner: AlgorithmAttribution, loser: AlgorithmAttribution
+) -> KernelAttribution:
+    """The kernel that moves the gap most: largest |excess| across BOTH
+    algorithms (the winner being unusually *efficient* on one kernel is as
+    much a root cause as the loser being inefficient). Ties: loser first,
+    then execution order."""
+    candidates = [(abs(k.excess), 1, -i, k) for i, k in enumerate(loser.kernels)]
+    candidates += [(abs(k.excess), 0, -i, k) for i, k in enumerate(winner.kernels)]
+    return max(candidates, key=lambda c: c[:3])[3]
+
+
+def classify_anomaly(
+    record: Mapping[str, Any],
+    winner: AlgorithmAttribution,
+    loser: AlgorithmAttribution,
+    *,
+    min_evidence: float = 0.5,
+) -> Explanation:
+    """Assign a cause + evidence score to one anomaly from its two
+    attributions. ``min_evidence`` is the fraction of the gap a component
+    must explain before the taxonomy commits to it."""
+    gap = loser.t_total - winner.t_total
+    d_roofline = loser.t_roofline_sum - winner.t_roofline_sum
+    d_excess = loser.excess_total - winner.excess_total
+    d_residual = loser.residual - winner.residual
+    components = {
+        "roofline": d_roofline,
+        "kernel_excess": d_excess,
+        "residual": d_residual,
+    }
+
+    def done(cause: str, evidence: float,
+             off: Optional[KernelAttribution]) -> Explanation:
+        off_alg = None
+        if off is not None:
+            off_alg = off.name.split("::", 1)[0]
+        return Explanation(
+            uid=str(record["uid"]),
+            reason=str(record.get("reason", "")),
+            cause=cause,
+            evidence=max(0.0, min(1.0, evidence)),
+            winner=winner.algorithm,
+            loser=loser.algorithm,
+            gap=gap,
+            gap_rel=(gap / winner.t_total) if winner.t_total > 0 else 0.0,
+            offending_algorithm=off_alg,
+            offending_kernel=off.kernel.label if off is not None else None,
+            components=components,
+        )
+
+    if gap <= 0:
+        # the "loser" measured no slower than the winner — the census
+        # ranking split on noise the medians cannot reproduce
+        return done("unexplained", 0.0, None)
+
+    frac_excess = d_excess / gap
+    frac_residual = d_residual / gap
+    if frac_excess >= min_evidence and frac_excess >= frac_residual:
+        off = _offending(winner, loser)
+        cause = ("memory_bound_segment" if off.bound == "memory"
+                 else "shape_kernel_efficiency")
+        return done(cause, frac_excess, off)
+    if frac_residual >= min_evidence:
+        return done("dispatch_overhead", frac_residual, None)
+    best = max(frac_excess, frac_residual, 0.0)
+    return done("unexplained", best, None)

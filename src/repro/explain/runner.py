@@ -1,0 +1,552 @@
+"""ExplainSpec + sharded, resumable explanation campaigns.
+
+An explanation campaign consumes a finished (or finishing) DiscriminantSweep
+census and produces one explanation record per anomaly. It reuses the whole
+measurement stack: each anomaly becomes a
+:class:`~repro.core.session.MeasurementSession` whose measured names are the
+winner and loser algorithms *plus every kernel segment of both*, driven in
+chunks through :class:`~repro.core.engine.ExperimentEngine` campaigns with
+the same persistence contract as the sweep — engine state saved every
+``save_every`` steps, records appended to per-shard JSONL
+(:class:`~repro.core.sweep.ShardStore`), and for the deterministic census
+backends a SIGKILLed explain run resumes **byte-identical** to an
+uninterrupted one.
+
+Backends follow the census: a ``cost_model``/``simulated`` census is
+explained on the same synthetic machine (segment costs reconstructed from
+the record's ``kernels``/``flops``/``base_seed`` pointers — zero census
+re-runs, zero jax imports); a ``wall_clock`` census re-measures each kernel
+in isolation with fresh jitted workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.measure import CostModelTimer, NoiseProfile, SimulatedTimer, Timer, WallClockTimer
+from repro.core.session import MeasurementSession
+from repro.core.sweep import (
+    InstanceSpec,
+    ShardStore,
+    SweepSpec,
+    instance_entry,
+    merge_shards,
+    run_chunked_campaign,
+    synthetic_efficiencies,
+)
+from repro.roofline.terms import MachineSpec, get_machine, synthetic_machine
+
+from .attribution import AlgorithmAttribution, attribute_algorithm
+from .classify import classify_anomaly, pick_winner_loser
+from .decompose import (
+    KernelSpec,
+    build_kernel_workload,
+    kernel_name,
+    kernels_from_compact,
+    kernels_from_record,
+    kernels_to_compact,
+)
+
+SPEC_FILE = "espec.json"
+
+
+@dataclass
+class ExplainSpec:
+    """One explanation campaign, declaratively. ``census`` points at the
+    sweep's ``--out`` directory; everything else is campaign knobs. The
+    work list (which anomalies, in which shard) is a pure function of this
+    spec plus the census records, so any worker anywhere agrees on it."""
+
+    name: str = "explain"
+    census: str = ""
+    n_shards: int = 4
+    #: segment measurement campaign (Procedure 4 over kernels)
+    m_per_iteration: int = 3
+    eps: float = 0.03
+    max_measurements: int = 12
+    chunk_size: int = 8
+    save_every: int = 25
+    #: MachineSpec registry name; empty = derive from the census backend
+    #: (synthetic machine for cost_model/simulated, cpu-1core for wall_clock)
+    machine: str = ""
+    min_evidence: float = 0.5
+    base_seed: int = 0
+    fsync: bool = False
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if not 0.0 <= self.min_evidence <= 1.0:
+            raise ValueError("min_evidence must be in [0, 1]")
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["version"] = 1
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExplainSpec":
+        kwargs = {
+            f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d
+        }
+        return cls(**kwargs)
+
+    def save(self, path: str) -> str:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ExplainSpec":
+        with open(path) as fh:
+            return cls.from_dict(json.load(fh))
+
+
+# ------------------------------------------------------------ the work list ---
+
+
+def load_census(espec: ExplainSpec) -> Tuple[SweepSpec, List[Dict[str, Any]]]:
+    """(sweep spec, merged census records) for the campaign's census."""
+    spec_file = os.path.join(espec.census, "spec.json")
+    sweep_spec = SweepSpec.load(spec_file)
+    return sweep_spec, merge_shards(sweep_spec, espec.census)
+
+
+def explain_targets(espec: ExplainSpec) -> Tuple[SweepSpec, List[Dict[str, Any]]]:
+    """(sweep spec, anomaly records in global grid order) — the campaign's
+    deterministic work list. Non-anomalous records need no explanation."""
+    sweep_spec, records = load_census(espec)
+    return sweep_spec, [r for r in records if r.get("is_anomaly")]
+
+
+def shard_targets(espec: ExplainSpec, targets: Sequence[Mapping[str, Any]],
+                  shard: int) -> List[Mapping[str, Any]]:
+    """Round-robin by work-list position (like the sweep: adjacent,
+    similar-cost anomalies land on different shards)."""
+    if not 0 <= shard < espec.n_shards:
+        raise ValueError(f"shard {shard} out of range [0, {espec.n_shards})")
+    return [r for i, r in enumerate(targets) if i % espec.n_shards == shard]
+
+
+def resolve_machine(espec: ExplainSpec, sweep_spec: SweepSpec) -> MachineSpec:
+    """The roofline floor's hardware: explicit registry pick, else derived
+    from the census backend (the synthetic machine IS the cost-model
+    census's hardware — predictions of flops/flop_rate make the recovered
+    per-kernel efficiencies equal the injected factors)."""
+    if espec.machine:
+        return get_machine(espec.machine)
+    if sweep_spec.backend in ("cost_model", "simulated"):
+        return synthetic_machine(f"sweep:{sweep_spec.name}", sweep_spec.flop_rate)
+    return get_machine("cpu-1core")
+
+
+def record_to_instance(sweep_spec: SweepSpec, record: Mapping[str, Any]) -> InstanceSpec:
+    """Rebuild the census row from its pointers (``params`` in PR 4+
+    records); pre-pointer censuses fall back to a grid re-expansion."""
+    if record.get("params"):
+        return InstanceSpec(
+            index=int(record["index"]), uid=str(record["uid"]),
+            family=str(record["family"]), params=dict(record["params"]),
+        )
+    by_uid = {i.uid: i for i in sweep_spec.expand()}
+    return by_uid[str(record["uid"])]
+
+
+def _record_flops(sweep_spec: SweepSpec, record: Mapping[str, Any]) -> Dict[str, float]:
+    """Analytic FLOPs per algorithm: the record's pointer when present
+    (bit-exact with what the census measured), else rebuilt analytically."""
+    if record.get("flops"):
+        return {k: float(v) for k, v in record["flops"].items()}
+    flops, _, _ = instance_entry(record_to_instance(sweep_spec, record))
+    return {k: float(v) for k, v in flops.items()}
+
+
+# -------------------------------------------------------- session building ---
+
+
+def _entropy(espec: ExplainSpec, record: Mapping[str, Any], stream: int) -> List[int]:
+    """Explain-side RNG entropy, disjoint from the sweep's streams (the
+    sweep uses streams 1-3; explain starts at 11)."""
+    return [int(espec.base_seed), int(record["index"]), int(stream)]
+
+
+def _measurement_names(
+    winner: str, loser: str,
+    kernels: Mapping[str, Sequence[KernelSpec]],
+) -> List[str]:
+    """Session measurement order: whole algorithms first, then each
+    algorithm's kernel segments in execution order."""
+    names = [winner, loser]
+    for alg in (winner, loser):
+        names += [kernel_name(alg, i, k) for i, k in enumerate(kernels[alg])]
+    return names
+
+
+def _synthetic_segment_costs(
+    sweep_spec: SweepSpec,
+    record: Mapping[str, Any],
+    involved: Sequence[str],
+    kernels: Mapping[str, Sequence[KernelSpec]],
+) -> Dict[str, float]:
+    """True segment costs on the synthetic machine: the injected
+    per-algorithm efficiency factor (reconstructed from the census
+    ``base_seed``/``flops`` pointers via the same sorted-name RNG draw)
+    applied to each kernel's share of the algorithm's FLOPs. Kernel costs
+    sum to the whole-algorithm cost the census measured, modulo the
+    analytic FLOP split."""
+    flops = _record_flops(sweep_spec, record)
+    eff_rng = np.random.default_rng([
+        int(record.get("base_seed", sweep_spec.base_seed)),
+        int(record["index"]), 1,
+    ])
+    eff = synthetic_efficiencies(flops, eff_rng, sweep_spec.eff_sigma)
+    costs: Dict[str, float] = {}
+    for alg in involved:
+        costs[alg] = flops[alg] / sweep_spec.flop_rate * eff[alg]
+        for i, k in enumerate(kernels[alg]):
+            costs[kernel_name(alg, i, k)] = (
+                k.flops / sweep_spec.flop_rate * eff[alg]
+            )
+    return costs
+
+
+def _build_timer(
+    espec: ExplainSpec,
+    sweep_spec: SweepSpec,
+    record: Mapping[str, Any],
+    involved: Sequence[str],
+    kernels: Mapping[str, Sequence[KernelSpec]],
+) -> Timer:
+    if sweep_spec.backend == "wall_clock":
+        return WallClockTimer(
+            _wall_clock_workloads(sweep_spec, record, involved, kernels)
+        )
+    costs = _synthetic_segment_costs(sweep_spec, record, involved, kernels)
+    noise_seed = int(
+        np.random.default_rng(_entropy(espec, record, 11)).integers(0, 2**63 - 1)
+    )
+    if sweep_spec.backend == "cost_model":
+        return CostModelTimer(
+            costs, rel_sigma=sweep_spec.noise_sigma, seed=noise_seed
+        )
+    profiles = {
+        name: NoiseProfile(
+            base=cost,
+            rel_sigma=sweep_spec.noise_sigma,
+            bimodal_shift=sweep_spec.bimodal_shift,
+            bimodal_prob=sweep_spec.bimodal_prob,
+        )
+        for name, cost in costs.items()
+    }
+    return SimulatedTimer(profiles, seed=noise_seed)
+
+
+def _whole_algorithm_workloads(
+    inst: InstanceSpec, involved: Sequence[str]
+) -> Dict[str, Callable[[], Any]]:
+    """Jitted+warmed workloads for ONLY the involved algorithms. A chain
+    instance enumerates dozens of algorithms; compiling all of them to
+    extract the winner/loser pair would dominate every wall-clock
+    explanation, so chains build the two thunks selectively. Generalized
+    families have <= 3 variants — the census builder is cheap enough."""
+    if inst.family == "chain":
+        from repro.expressions.algorithms import build_algorithm_fn, make_chain_inputs
+        from repro.expressions.instances import random_instance
+
+        p = inst.params
+        chain = random_instance(
+            int(p["n_matrices"]), int(p["lo"]), int(p["hi"]), seed=int(p["seed"])
+        )
+        algs = {a.name: a for a in chain.algorithms()}
+        mats = make_chain_inputs(chain.dims, seed=int(p["seed"]))
+        out: Dict[str, Callable[[], Any]] = {}
+        for alg in involved:
+            fn = build_algorithm_fn(algs[alg], mats, jit=True)
+            fn()  # warm up: jit compilation must not land in a timed region
+            out[alg] = fn
+        return out
+    _, _, build_workloads = instance_entry(inst)
+    whole = build_workloads()
+    return {alg: whole[alg] for alg in involved}
+
+
+def _wall_clock_workloads(
+    sweep_spec: SweepSpec,
+    record: Mapping[str, Any],
+    involved: Sequence[str],
+    kernels: Mapping[str, Sequence[KernelSpec]],
+) -> Dict[str, Callable[[], Any]]:
+    """Whole-algorithm workloads come from the instance builders (same
+    inputs as the census measured); kernel segments get fresh isolated
+    jitted workloads."""
+    inst = record_to_instance(sweep_spec, record)
+    out = _whole_algorithm_workloads(inst, involved)
+    seed = int(record["index"])
+    for alg in involved:
+        for i, k in enumerate(kernels[alg]):
+            out[kernel_name(alg, i, k)] = build_kernel_workload(k, seed=seed)
+    return out
+
+
+def build_explain_session(
+    espec: ExplainSpec,
+    sweep_spec: SweepSpec,
+    record: Mapping[str, Any],
+) -> MeasurementSession:
+    """One anomaly's explanation as a resumable measurement session: the
+    winner/loser pair and all their kernel segments, measured together
+    under Procedure 4 so segment medians stabilize before attribution."""
+    winner, loser = pick_winner_loser(record)
+    all_kernels = kernels_from_record(record)
+    kernels = {winner: all_kernels[winner], loser: all_kernels[loser]}
+    names = _measurement_names(winner, loser, kernels)
+    timer = _build_timer(espec, sweep_spec, record, (winner, loser), kernels)
+    machine = resolve_machine(espec, sweep_spec)
+    shuffle_seed = int(
+        np.random.default_rng(_entropy(espec, record, 13)).integers(0, 2**31 - 1)
+    )
+    return MeasurementSession(
+        str(record["uid"]),
+        names,
+        timer,
+        m_per_iteration=espec.m_per_iteration,
+        eps=espec.eps,
+        max_measurements=espec.max_measurements,
+        shuffle_seed=shuffle_seed,
+        meta={
+            "uid": str(record["uid"]),
+            "index": int(record["index"]),
+            "family": str(record["family"]),
+            "size": record.get("size"),
+            "reason": str(record.get("reason", "")),
+            "winner": winner,
+            "loser": loser,
+            "kernels": kernels_to_compact(kernels),
+            "machine": machine.to_dict(),
+            "backend": sweep_spec.backend,
+        },
+    )
+
+
+# ------------------------------------------------------------- the records ---
+
+
+def _median_times(session: MeasurementSession) -> Dict[str, float]:
+    return {
+        name: float(np.median(session.store.row(name)))
+        for name in session.store.names()
+    }
+
+
+def record_from_explain_session(
+    session: MeasurementSession, espec: ExplainSpec
+) -> Dict[str, Any]:
+    """One explanation JSONL record. Deterministic-fields-only, like the
+    census records: medians of deterministic draws, analytic rooflines —
+    a resumed explain run merges byte-identical."""
+    meta = session.meta
+    machine = MachineSpec.from_dict(meta["machine"])
+    kernels = kernels_from_compact(meta["kernels"])
+    medians = _median_times(session)
+    winner, loser = meta["winner"], meta["loser"]
+    attrs: Dict[str, AlgorithmAttribution] = {
+        alg: attribute_algorithm(
+            alg, medians[alg], kernels[alg], medians, machine
+        )
+        for alg in (winner, loser)
+    }
+    expl = classify_anomaly(
+        meta, attrs[winner], attrs[loser], min_evidence=espec.min_evidence
+    )
+    out = {
+        "uid": meta["uid"],
+        "index": int(meta["index"]),
+        "family": meta["family"],
+        "size": meta["size"],
+        "machine": machine.name,
+        "backend": meta.get("backend", ""),
+        "measurements_per_alg": session.measurements_per_alg,
+        "iterations": session.iterations,
+        "converged": session.converged,
+        "attribution": {
+            "winner": attrs[winner].row(),
+            "loser": attrs[loser].row(),
+        },
+    }
+    out.update(expl.to_dict())
+    return out
+
+
+# --------------------------------------------------------------- the runner ---
+
+
+def _wall_clock_explain_timers(
+    espec: ExplainSpec,
+    sweep_spec: SweepSpec,
+    records_by_uid: Mapping[str, Mapping[str, Any]],
+    uids: Sequence[str],
+) -> Dict[str, Timer]:
+    """Rebuild wall-clock segment backends for a resumed chunk (callables
+    do not serialize; everything derives from the census records)."""
+    timers: Dict[str, Timer] = {}
+    for uid in uids:
+        record = records_by_uid[uid]
+        winner, loser = pick_winner_loser(record)
+        all_kernels = kernels_from_record(record)
+        kernels = {winner: all_kernels[winner], loser: all_kernels[loser]}
+        timers[uid] = WallClockTimer(
+            _wall_clock_workloads(sweep_spec, record, (winner, loser), kernels)
+        )
+    return timers
+
+
+def run_explain_shard(
+    espec: ExplainSpec,
+    root: str,
+    shard: int,
+    *,
+    max_steps: Optional[int] = None,
+    progress: Optional[Callable[[str], None]] = None,
+    census: Optional[Tuple[SweepSpec, List[Dict[str, Any]]]] = None,
+) -> ShardStore:
+    """Run (or resume) one shard of the explanation campaign to completion.
+
+    Identical persistence contract to :func:`repro.core.sweep.run_shard`:
+    anomalies are processed in chunks of ``espec.chunk_size``, each chunk
+    one interleaved engine campaign persisted every ``espec.save_every``
+    steps; completed chunks append explanation records to the shard JSONL
+    and drop the engine state. Any kill point resumes losing at most
+    ``save_every`` steps of work and zero determinism (cost_model /
+    simulated censuses resume bit-identical).
+
+    ``census`` is an optional preloaded :func:`explain_targets` result —
+    workers driving several shards pass it so the census JSONLs are parsed
+    once per process, not once per shard.
+    """
+    sweep_spec, targets = census if census is not None else explain_targets(espec)
+    mine = shard_targets(espec, targets, shard)
+    records_by_uid = {str(r["uid"]): r for r in mine}
+    store = ShardStore(root, shard, fsync=espec.fsync).open()
+    rebuild = None
+    if sweep_spec.backend == "wall_clock":
+        rebuild = lambda names: _wall_clock_explain_timers(
+            espec, sweep_spec, records_by_uid, names
+        )
+    run_chunked_campaign(
+        store,
+        list(records_by_uid),
+        lambda uid: build_explain_session(espec, sweep_spec, records_by_uid[uid]),
+        lambda session: record_from_explain_session(session, espec),
+        chunk_size=espec.chunk_size,
+        save_every=espec.save_every,
+        rebuild_timers=rebuild,
+        max_steps=max_steps,
+        progress=progress,
+        label=f"explain shard {shard}",
+    )
+    return store
+
+
+# ------------------------------------------------------------ merge/triage ---
+
+
+def merge_explained(espec: ExplainSpec, root: str) -> List[Dict[str, Any]]:
+    """All shard explanation records, deduped by uid, in census grid order."""
+    seen: Dict[str, Dict[str, Any]] = {}
+    for shard in range(espec.n_shards):
+        store = ShardStore(root, shard).open(readonly=True)
+        for r in store.records:
+            seen.setdefault(r["uid"], r)
+    return sorted(seen.values(), key=lambda r: r["index"])
+
+
+def write_merged_explained(
+    espec: ExplainSpec, root: str, path: Optional[str] = None
+) -> str:
+    path = path or os.path.join(root, "merged.jsonl")
+    records = merge_explained(espec, root)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        for r in records:
+            fh.write(json.dumps(r, sort_keys=True, separators=(",", ":")) + "\n")
+    os.replace(tmp, path)
+    return path
+
+
+def explain_summary(records: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
+    """Cause-rate aggregates: overall, by cause, by family x cause, and the
+    offending-kernel-op tally — the numbers behind the cause tables."""
+    n = len(records)
+
+    def cause_agg(rows: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
+        by: Dict[str, Dict[str, Any]] = {}
+        for r in rows:
+            c = by.setdefault(r["cause"], {"n": 0, "evidence_sum": 0.0})
+            c["n"] += 1
+            c["evidence_sum"] += float(r["evidence"])
+        return {
+            cause: {
+                "n": c["n"],
+                "share": c["n"] / len(rows) if rows else 0.0,
+                "mean_evidence": c["evidence_sum"] / c["n"],
+            }
+            for cause, c in sorted(by.items())
+        }
+
+    by_family: Dict[str, Any] = {}
+    for fam in sorted({r["family"] for r in records}):
+        by_family[fam] = cause_agg([r for r in records if r["family"] == fam])
+    offending: Dict[str, int] = {}
+    for r in records:
+        k = r.get("offending_kernel")
+        if k:
+            op = k.split("[", 1)[0]
+            offending[op] = offending.get(op, 0) + 1
+    return {
+        "total": n,
+        "mean_evidence": (
+            sum(float(r["evidence"]) for r in records) / n if n else 0.0
+        ),
+        "by_cause": cause_agg(list(records)),
+        "by_family_cause": by_family,
+        "offending_ops": offending,
+    }
+
+
+def explain_progress(
+    espec: ExplainSpec,
+    root: str,
+    targets: Optional[Sequence[Mapping[str, Any]]] = None,
+) -> Dict[str, Any]:
+    """Explained / total anomalies per shard (the status line). ``targets``
+    is an optional preloaded anomaly list — drivers that already parsed
+    the census skip a second parse."""
+    if targets is None:
+        _, targets = explain_targets(espec)
+    per_shard = []
+    total_done = 0
+    for shard in range(espec.n_shards):
+        n_total = len(shard_targets(espec, targets, shard))
+        store = ShardStore(root, shard)
+        n_done = 0
+        if os.path.exists(store.records_path):
+            n_done = len(store.open(readonly=True).completed_uids())
+        per_shard.append({
+            "shard": shard, "done": n_done, "total": n_total,
+            "in_flight_chunk": os.path.exists(store.engine_path),
+        })
+        total_done += n_done
+    return {
+        "name": espec.name,
+        "anomalies": len(targets),
+        "completed": total_done,
+        "shards": per_shard,
+    }

@@ -1,0 +1,283 @@
+"""AnomalyExplainer launcher — plan / run / report for explanation campaigns.
+
+Consume a DiscriminantSweep census, fan its anomalies out across worker
+processes (each driving resumable ExperimentEngine campaigns over the
+winner/loser kernel segments, :mod:`repro.explain.runner`), then merge the
+sharded explanation records and report ranked, evidence-backed cause tables.
+
+    # explain every anomaly of a finished census, 4 workers, resumable
+    PYTHONPATH=src python -m repro.launch.explain run \\
+        --census /tmp/census --out /tmp/census_explain --workers 4
+
+    # inspect / continue / report
+    PYTHONPATH=src python -m repro.launch.explain status --out DIR
+    PYTHONPATH=src python -m repro.launch.explain run    --out DIR --workers 4
+    PYTHONPATH=src python -m repro.launch.explain merge  --out DIR
+    PYTHONPATH=src python -m repro.launch.explain report --out DIR
+
+Layout under ``--out`` mirrors the sweep: ``espec.json`` (campaign spec; the
+work list is a pure function of it plus the census records),
+``shard-NNNN.jsonl`` (append-only explanation records),
+``shard-NNNN.manifest.json``, ``shard-NNNN.engine.json`` (in-flight chunk,
+present only mid-chunk), ``merged.jsonl`` (after ``merge``).
+
+Resume semantics match the sweep: ``run`` is idempotent, and for the
+deterministic census backends (``cost_model``, ``simulated``) a SIGKILLed
+explain run resumes byte-identical to an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional
+
+from repro.explain.runner import (
+    SPEC_FILE,
+    ExplainSpec,
+    explain_progress,
+    explain_summary,
+    merge_explained,
+    run_explain_shard,
+    write_merged_explained,
+)
+from repro.launch.sweep import _int_list, _worker_env
+
+
+def spec_path(out: str) -> str:
+    return os.path.join(out, SPEC_FILE)
+
+
+def add_campaign_args(p: argparse.ArgumentParser) -> None:
+    g = p.add_argument_group("campaign (used when OUT has no espec.json yet)")
+    g.add_argument("--census", default=None,
+                   help="DiscriminantSweep --out directory to explain")
+    g.add_argument("--name", default="explain")
+    g.add_argument("--shards", type=int, default=4)
+    g.add_argument("--m-per-iteration", type=int, default=3)
+    g.add_argument("--eps", type=float, default=0.03)
+    g.add_argument("--max-measurements", type=int, default=12)
+    g.add_argument("--chunk-size", type=int, default=8)
+    g.add_argument("--save-every", type=int, default=25)
+    g.add_argument("--machine", default="",
+                   help="MachineSpec registry name for the roofline floor "
+                   "(default: derived from the census backend)")
+    g.add_argument("--min-evidence", type=float, default=0.5,
+                   help="fraction of the time gap a cause must explain")
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--fsync", action="store_true")
+
+
+def load_or_plan_spec(args: argparse.Namespace, *, announce: bool = True) -> ExplainSpec:
+    path = spec_path(args.out)
+    if os.path.exists(path):
+        espec = ExplainSpec.load(path)
+        if announce:
+            print(f"# using existing plan {path} (census {espec.census})")
+        return espec
+    if not args.census:
+        raise SystemExit(f"{path} missing and no --census given")
+    census = os.path.abspath(args.census)
+    if not os.path.exists(os.path.join(census, "spec.json")):
+        raise SystemExit(f"{census} is not a sweep directory (no spec.json)")
+    if os.path.abspath(args.out) == census:
+        raise SystemExit(
+            "--out must differ from --census (both store shard-NNNN files)"
+        )
+    os.makedirs(args.out, exist_ok=True)
+    espec = ExplainSpec(
+        name=args.name,
+        census=census,
+        n_shards=args.shards,
+        m_per_iteration=args.m_per_iteration,
+        eps=args.eps,
+        max_measurements=args.max_measurements,
+        chunk_size=args.chunk_size,
+        save_every=args.save_every,
+        machine=args.machine,
+        min_evidence=args.min_evidence,
+        base_seed=args.seed,
+        fsync=args.fsync,
+    )
+    espec.save(path)
+    if announce:
+        prog = explain_progress(espec, args.out)
+        print(f"# planned {prog['anomalies']} anomaly explanations over "
+              f"{espec.n_shards} shards (census {census})")
+    return espec
+
+
+# ------------------------------------------------------------- subcommands ---
+
+
+def cmd_plan(args: argparse.Namespace) -> int:
+    path = spec_path(args.out)
+    if os.path.exists(path) and not args.force:
+        raise SystemExit(f"{path} exists; pass --force to re-plan")
+    if os.path.exists(path):
+        os.remove(path)
+        removed = 0
+        for fn in sorted(os.listdir(args.out)):
+            if (fn.startswith("shard-") and
+                    fn.split(".", 1)[-1] in ("jsonl", "manifest.json",
+                                             "engine.json")) \
+                    or fn == "merged.jsonl":
+                os.remove(os.path.join(args.out, fn))
+                removed += 1
+        if removed:
+            print(f"# --force: removed {removed} stale shard/merge artifacts")
+    espec = load_or_plan_spec(args)
+    prog = explain_progress(espec, args.out)
+    for row in prog["shards"]:
+        print(f"#   shard {row['shard']:4d}: {row['total']} anomalies")
+    print(f"# spec: {path}")
+    return 0
+
+
+def cmd_run(args: argparse.Namespace) -> int:
+    from repro.explain.runner import explain_targets
+
+    espec = load_or_plan_spec(args, announce=False)
+    _, targets = explain_targets(espec)  # parse the census once
+    prog = explain_progress(espec, args.out, targets=targets)
+    print(f"# explaining {prog['anomalies']} anomalies from {espec.census} "
+          f"({espec.n_shards} shards)")
+    if prog["anomalies"] == 0:
+        print("# census has no anomalies — nothing to explain")
+        write_merged_explained(espec, args.out)
+        return 0
+    workers = max(1, min(args.workers, espec.n_shards))
+    assignment = {
+        w: [s for s in range(espec.n_shards) if s % workers == w]
+        for w in range(workers)
+    }
+    procs: List[subprocess.Popen] = []
+    for w, shards in assignment.items():
+        cmd = [
+            sys.executable, "-m", "repro.launch.explain", "work",
+            "--out", args.out, "--shards", ",".join(map(str, shards)),
+        ]
+        if args.max_steps_per_shard is not None:
+            cmd += ["--max-steps-per-shard", str(args.max_steps_per_shard)]
+        procs.append(subprocess.Popen(cmd, env=_worker_env()))
+    failed = []
+    for w, proc in enumerate(procs):
+        rc = proc.wait()
+        if rc != 0:
+            failed.append((w, rc))
+    prog = explain_progress(espec, args.out, targets=targets)
+    print(f"# {prog['completed']}/{prog['anomalies']} anomalies explained")
+    if failed:
+        for w, rc in failed:
+            print(f"# worker {w} exited {rc} (shards {assignment[w]})",
+                  file=sys.stderr)
+        print("# re-run the same command to resume", file=sys.stderr)
+        return 1
+    if prog["completed"] == prog["anomalies"]:
+        path = write_merged_explained(espec, args.out)
+        print(f"# merged explanations: {path}")
+    return 0
+
+
+def cmd_work(args: argparse.Namespace) -> int:
+    """Internal: run an assigned shard list sequentially (one worker)."""
+    from repro.explain.runner import explain_targets
+
+    espec = ExplainSpec.load(spec_path(args.out))
+    census = explain_targets(espec)  # parse the census once per worker
+    for shard in _int_list(args.shards):
+        run_explain_shard(
+            espec, args.out, shard,
+            max_steps=args.max_steps_per_shard,
+            progress=lambda msg: print(f"# {msg}", flush=True),
+            census=census,
+        )
+    return 0
+
+
+def cmd_status(args: argparse.Namespace) -> int:
+    espec = ExplainSpec.load(spec_path(args.out))
+    prog = explain_progress(espec, args.out)
+    print(f"# explain {prog['name']}: {prog['completed']}/{prog['anomalies']} "
+          f"anomalies explained")
+    for row in prog["shards"]:
+        flag = " (chunk in flight)" if row["in_flight_chunk"] else ""
+        print(f"#   shard {row['shard']:4d}: {row['done']}/{row['total']}{flag}")
+    return 0
+
+
+def cmd_merge(args: argparse.Namespace) -> int:
+    espec = ExplainSpec.load(spec_path(args.out))
+    path = write_merged_explained(espec, args.out)
+    n = sum(1 for _ in open(path))
+    print(f"# merged {n} explanations -> {path}")
+    return 0
+
+
+def cmd_report(args: argparse.Namespace) -> int:
+    from repro.launch.report_md import explain_tables
+
+    espec = ExplainSpec.load(spec_path(args.out))
+    records = merge_explained(espec, args.out)
+    if args.json:
+        json.dump(explain_summary(records), sys.stdout, indent=1, sort_keys=True)
+        print()
+        return 0
+    if not records:
+        print("(no explained anomalies yet — run the campaign first)")
+        return 1
+    print(explain_tables(records, name=espec.name))
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.explain",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="snapshot the campaign spec (espec.json)")
+    p.add_argument("--out", required=True)
+    p.add_argument("--force", action="store_true")
+    add_campaign_args(p)
+    p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("run", help="run/resume the campaign with N workers")
+    p.add_argument("--out", required=True)
+    p.add_argument("--workers", type=int, default=1)
+    p.add_argument("--max-steps-per-shard", type=int, default=None,
+                   help="pause each shard after N engine steps (resumable)")
+    add_campaign_args(p)
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("work", help="internal: run an assigned shard list")
+    p.add_argument("--out", required=True)
+    p.add_argument("--shards", required=True, help="comma list of shard ids")
+    p.add_argument("--max-steps-per-shard", type=int, default=None)
+    p.set_defaults(fn=cmd_work)
+
+    p = sub.add_parser("status", help="explained/total anomalies per shard")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("merge", help="merge shard JSONLs into merged.jsonl")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=cmd_merge)
+
+    p = sub.add_parser("report", help="cause tables (markdown)")
+    p.add_argument("--out", required=True)
+    p.add_argument("--json", action="store_true",
+                   help="raw explain_summary JSON instead of markdown")
+    p.set_defaults(fn=cmd_report)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,7 +41,7 @@ from repro.models import ModelConfig
 from repro.models.config import LayerKind
 from repro.roofline import analyze, terms_from_counts
 from repro.roofline.hlo import attention_score_traffic
-from repro.roofline.terms import HBM_BW, PEAK_FLOPS
+from repro.roofline.terms import DEFAULT_MACHINE
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "../../.."))
 LOG = os.path.join(ROOT, "reports", "perf_iterations.json")
@@ -97,10 +97,11 @@ def run_iteration(
         ) / mesh.devices.size
     adj_bytes = max(counts.bytes - score_bytes, 0.0)
     adj_flops = max(counts.flops - skip_flops, 0.0)
-    t_mem_k = adj_bytes / HBM_BW
-    t_comp_k = adj_flops / PEAK_FLOPS
+    machine = DEFAULT_MACHINE
+    t_mem_k = machine.t_memory(adj_bytes)
+    t_comp_k = machine.t_compute(adj_flops)
     t_bound_k = max(t_comp_k, t_mem_k, terms.t_collective)
-    ideal = mf / (mesh.devices.size * PEAK_FLOPS)
+    ideal = mf / (mesh.devices.size * machine.peak_flops)
     frac_k = ideal / t_bound_k if t_bound_k else 0.0
 
     row = terms.row()

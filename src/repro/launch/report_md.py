@@ -58,6 +58,55 @@ def census_tables(records, name: str = "census") -> str:
     return "\n".join(out) + "\n"
 
 
+def explain_tables(records, name: str = "explain") -> str:
+    """Markdown cause tables from merged AnomalyExplainer records: cause
+    rates with evidence, family x cause, offending-kernel tally, and the
+    highest-evidence examples — the census anomalies, explained."""
+    from repro.explain.runner import explain_summary
+
+    s = explain_summary(records)
+    out = [
+        f"## Explanations `{name}` — anomaly root causes",
+        "",
+        f"{s['total']} anomalies explained, mean evidence "
+        f"{s['mean_evidence']:.2f} (fraction of the winner/loser time gap "
+        "the assigned cause accounts for).",
+        "",
+        "### By cause",
+        "",
+        "| cause | n | share | mean evidence |",
+        "|---|---|---|---|",
+    ]
+    for cause, a in s["by_cause"].items():
+        out.append(f"| {cause} | {a['n']} | {100.0 * a['share']:.1f}% | "
+                   f"{a['mean_evidence']:.2f} |")
+    out += ["", "### Family x cause", "",
+            "| family | cause | n | mean evidence |", "|---|---|---|---|"]
+    for fam, causes in s["by_family_cause"].items():
+        for cause, a in causes.items():
+            out.append(f"| {fam} | {cause} | {a['n']} | "
+                       f"{a['mean_evidence']:.2f} |")
+    if s["offending_ops"]:
+        out += ["", "### Offending kernels", "",
+                "| kernel op | anomalies it explains |", "|---|---|"]
+        for op, n in sorted(s["offending_ops"].items(),
+                            key=lambda kv: (-kv[1], kv[0])):
+            out.append(f"| {op} | {n} |")
+    top = sorted(records, key=lambda r: (-float(r["evidence"]), r["index"]))[:5]
+    if top:
+        out += ["", "### Highest-evidence examples", "",
+                "| uid | reason | cause | evidence | offending kernel | "
+                "gap |", "|---|---|---|---|---|---|"]
+        for r in top:
+            out.append(
+                f"| {r['uid']} | {r['reason']} | {r['cause']} | "
+                f"{float(r['evidence']):.2f} | "
+                f"{r.get('offending_kernel') or '—'} | "
+                f"{100.0 * float(r['gap_rel']):.1f}% |"
+            )
+    return "\n".join(out) + "\n"
+
+
 def roofline_table(label: str) -> str:
     path = os.path.join(ROOT, f"reports/dryrun_{label}.json")
     if not os.path.exists(path):

@@ -251,9 +251,18 @@ def cmd_status(args: argparse.Namespace) -> int:
     prog = sweep_progress(spec, args.out)
     print(f"# sweep {prog['name']}: {prog['completed']}/{prog['instances']} "
           f"instances complete")
+    if prog["completed"]:
+        fams = ", ".join(
+            f"{fam}={a['anomalies']}/{a['done']}"
+            for fam, a in sorted(prog["by_family"].items())
+        )
+        print(f"# anomalies so far: {prog['anomalies']}/{prog['completed']} "
+              f"({fams})")
     for row in prog["shards"]:
         flag = " (chunk in flight)" if row["in_flight_chunk"] else ""
-        print(f"#   shard {row['shard']:4d}: {row['done']}/{row['total']}{flag}")
+        anom = f", {row['anomalies']} anomalies" if row["done"] else ""
+        print(f"#   shard {row['shard']:4d}: {row['done']}/{row['total']}"
+              f"{anom}{flag}")
     return 0
 
 

@@ -1,15 +1,33 @@
 """repro.roofline — compute/memory/collective terms from compiled HLO."""
 
 from .hlo import HloCounts, analyze, parse_hlo
-from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms, terms_from_counts
+from .terms import (
+    DEFAULT_MACHINE,
+    HBM_BW,
+    ICI_BW,
+    MACHINES,
+    PEAK_FLOPS,
+    MachineSpec,
+    RooflineTerms,
+    get_machine,
+    register_machine,
+    synthetic_machine,
+    terms_from_counts,
+)
 
 __all__ = [
+    "DEFAULT_MACHINE",
     "HBM_BW",
     "HloCounts",
     "ICI_BW",
+    "MACHINES",
+    "MachineSpec",
     "PEAK_FLOPS",
     "RooflineTerms",
     "analyze",
+    "get_machine",
     "parse_hlo",
+    "register_machine",
+    "synthetic_machine",
     "terms_from_counts",
 ]

@@ -1,7 +1,8 @@
 """Roofline terms from the compiled dry-run artifact.
 
-Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s HBM
-bandwidth, ~50 GB/s/link ICI.
+Hardware is a selectable :class:`MachineSpec` (the :data:`MACHINES`
+registry), defaulting to TPU v5e-class — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM bandwidth, ~50 GB/s/link ICI:
 
     T_comp = HLO_FLOPs_per_device / peak_FLOPs
     T_mem  = HLO_bytes_per_device / HBM_bw
@@ -13,19 +14,103 @@ trip-count multiplication). The dominant term is the bottleneck; the
 roofline fraction reported in §Perf is T_ideal_compute / max(terms) where
 T_ideal_compute uses analytic MODEL_FLOPS (so wasted HLO compute counts
 against the score, not for it).
+
+Non-TPU hosts get roofline predictions too: the DiscriminantSweep census
+runs on arbitrary CPUs and on a *synthetic* machine (the deterministic
+cost-model backend), and the AnomalyExplainer needs per-kernel roofline
+floors there — :func:`synthetic_machine` derives a spec from the sweep's
+``flop_rate``, and ``cpu-1core`` models a pinned BLAS-on-one-core host.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional
 
-from .hlo import HloCounts
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-ICI_BW = 50e9                # bytes/s / link
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """The hardware constants every roofline term divides by.
+
+    ``dispatch_overhead_s`` is the fixed per-kernel launch cost (Python
+    dispatch + runtime) added on top of the compute/memory bound — zero for
+    within-one-XLA-program analysis, nonzero when predicting sequences of
+    separately dispatched kernels (the AnomalyExplainer's segment model).
+    """
+
+    name: str
+    peak_flops: float                 # FLOP/s
+    hbm_bw: float                     # bytes/s
+    ici_bw: float = 0.0               # bytes/s/link (0: no interconnect)
+    dispatch_overhead_s: float = 0.0  # seconds per dispatched kernel
+
+    def t_compute(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def t_memory(self, nbytes: float) -> float:
+        if self.hbm_bw <= 0:
+            return 0.0
+        return nbytes / self.hbm_bw
+
+    def t_collective(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        if self.ici_bw <= 0:
+            raise ValueError(
+                f"machine {self.name!r} has no interconnect (ici_bw=0) but "
+                f"the program moves {nbytes:.3e} collective bytes"
+            )
+        return nbytes / self.ici_bw
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "MachineSpec":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)
+                      if f.name in d})
+
+
+#: Selectable hardware registry. ``tpu-v5e`` keeps the historical constants
+#: (the module-level aliases below point at it); ``cpu-1core`` models the
+#: census host: one pinned core of a ~3 GHz x86 (16 f32 FLOP/cycle FMA
+#: throughput, one DDR channel's worth of bandwidth, ~µs JAX dispatch).
+MACHINES: Dict[str, MachineSpec] = {
+    "tpu-v5e": MachineSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                           ici_bw=50e9),
+    "cpu-1core": MachineSpec("cpu-1core", peak_flops=5e10, hbm_bw=2e10,
+                             dispatch_overhead_s=2e-6),
+}
+
+DEFAULT_MACHINE = MACHINES["tpu-v5e"]
+
+#: Back-compat aliases (pre-MachineSpec callers import these).
+PEAK_FLOPS = DEFAULT_MACHINE.peak_flops
+HBM_BW = DEFAULT_MACHINE.hbm_bw
+ICI_BW = DEFAULT_MACHINE.ici_bw
+
+
+def get_machine(name: str) -> MachineSpec:
+    if name not in MACHINES:
+        raise KeyError(f"unknown machine {name!r}; one of {sorted(MACHINES)}")
+    return MACHINES[name]
+
+
+def register_machine(spec: MachineSpec) -> MachineSpec:
+    """Add (or replace) a registry entry; returns the spec for chaining."""
+    MACHINES[spec.name] = spec
+    return spec
+
+
+def synthetic_machine(name: str, flop_rate: float) -> MachineSpec:
+    """The DiscriminantSweep cost-model backend as a MachineSpec: a pure
+    compute machine running at ``flop_rate`` — its predicted time for any
+    kernel is exactly ``flops / flop_rate``, so per-kernel efficiency
+    factors recovered against this roofline are the sweep's injected
+    per-algorithm efficiency factors. No memory system (the synthetic
+    machine has none): the memory term is 0 by ``hbm_bw=0`` convention."""
+    return MachineSpec(name=name, peak_flops=float(flop_rate), hbm_bw=0.0)
 
 
 @dataclasses.dataclass
@@ -44,14 +129,17 @@ class RooflineTerms:
     model_flops_total: float          # analytic 6ND-style
     memory_per_dev_bytes: float       # args + temp from memory_analysis
 
+    machine: MachineSpec = DEFAULT_MACHINE
     t_compute: float = 0.0
     t_memory: float = 0.0
     t_collective: float = 0.0
 
     def __post_init__(self) -> None:
-        self.t_compute = self.hlo_flops_per_dev / PEAK_FLOPS
-        self.t_memory = self.hlo_bytes_per_dev / HBM_BW
-        self.t_collective = self.collective_bytes_per_dev / ICI_BW
+        self.t_compute = self.machine.t_compute(self.hlo_flops_per_dev)
+        self.t_memory = self.machine.t_memory(self.hlo_bytes_per_dev)
+        self.t_collective = self.machine.t_collective(
+            self.collective_bytes_per_dev
+        )
 
     @property
     def dominant(self) -> str:
@@ -76,7 +164,7 @@ class RooflineTerms:
     def roofline_fraction(self) -> float:
         """Useful-compute roofline fraction (the §Perf score): ideal time
         for MODEL_FLOPS on all chips divided by the bounding term."""
-        ideal = self.model_flops_total / (self.n_devices * PEAK_FLOPS)
+        ideal = self.model_flops_total / (self.n_devices * self.machine.peak_flops)
         return ideal / self.t_bound if self.t_bound else 0.0
 
     def row(self) -> Dict[str, object]:
@@ -110,6 +198,7 @@ def terms_from_counts(
     counts: HloCounts,
     model_flops_total: float,
     memory_per_dev_bytes: float,
+    machine: Optional[MachineSpec] = None,
 ) -> RooflineTerms:
     return RooflineTerms(
         arch=arch,
@@ -123,4 +212,5 @@ def terms_from_counts(
         collective_breakdown=dict(counts.collective_bytes),
         model_flops_total=model_flops_total,
         memory_per_dev_bytes=memory_per_dev_bytes,
+        machine=machine or DEFAULT_MACHINE,
     )

@@ -133,6 +133,65 @@ def test_analyzer_scan_trip_count():
     assert abs(counts.flops / (2 * n**3 * L) - 1) < 0.02
 
 
+def test_breakdown_by_opcode_on_inline_typed_hlo():
+    """jax 0.4.x CPU prints operands WITH inline types
+    (``dot(f32[...] %x, ...)``); the per-opcode breakdown must count dot
+    FLOPs and carry trip-count weighting on that dialect too (PR 3 only
+    regression-tested ``analyze``)."""
+    from repro.roofline.hlo import breakdown_by_opcode
+
+    m, k, n = 48, 96, 32
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ).compile()
+    txt = c.as_text()
+    if "dot(f32[" not in txt:
+        pytest.skip("this jax prints the bare-operand HLO dialect; the "
+                    "inline-typed regression does not apply")
+    table = breakdown_by_opcode(txt)
+    assert table["dot"]["flops"] == pytest.approx(2.0 * m * k * n)
+    assert table["dot"]["count"] == 1.0
+
+    # scanned body: the dot row must be multiplied by the trip count
+    L = 7
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda h, w: (h @ w, None), x, ws)[0]
+
+    c2 = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((L, n, n), jnp.float32),
+    ).compile()
+    table2 = breakdown_by_opcode(c2.as_text())
+    assert table2["dot"]["flops"] == pytest.approx(2.0 * n**3 * L)
+    assert table2["dot"]["count"] == pytest.approx(float(L))
+
+
+def test_attention_score_traffic_on_inline_typed_hlo():
+    """Score-shaped [b, h, sq, skv] outputs must be found (and byte-counted)
+    on the inline-typed dialect; mismatched seq dims must count nothing."""
+    from repro.roofline.hlo import attention_score_traffic
+
+    b, h, s, d = 2, 2, 64, 8
+
+    def scores(q, kk):
+        # the softmax consumer keeps the [b, h, sq, skv] score tensor
+        # materialised (a bare einsum's size-1 dims get bitcast away)
+        return jax.nn.softmax(jnp.einsum("bhqd,bhkd->bhqk", q, kk), axis=-1)
+
+    c = jax.jit(scores).lower(
+        jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+    ).compile()
+    txt = c.as_text()
+    traffic = attention_score_traffic(txt, [s])
+    # at least the materialised score tensor itself, written + read once
+    assert traffic >= 4 * b * h * s * s
+    # a seq set that matches nothing counts nothing
+    assert attention_score_traffic(txt, [s + 1]) == 0.0
+
+
 def test_analyzer_collectives_and_per_device_flops():
     mesh = make_mesh(n_pods=1, dp=2, tp=4)
 

@@ -1,0 +1,459 @@
+"""AnomalyExplainer: decomposition exactness, machine registry, cause
+recovery on the synthetic census (the acceptance scenario), kill/resume
+byte-identity, and the CLI."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sweep import SweepSpec, merge_shards, run_shard, synthetic_efficiencies
+from repro.explain.attribution import attribute_algorithm, kernel_roofline
+from repro.explain.classify import CAUSES, classify_anomaly, pick_winner_loser
+from repro.explain.decompose import (
+    KernelSpec,
+    decompose_chain_dims,
+    decompose_generalized,
+    decompose_instance,
+    kernel_name,
+    kernels_from_record,
+)
+from repro.explain.runner import (
+    ExplainSpec,
+    explain_progress,
+    explain_summary,
+    explain_targets,
+    merge_explained,
+    resolve_machine,
+    run_explain_shard,
+)
+from repro.roofline.terms import (
+    DEFAULT_MACHINE,
+    HBM_BW,
+    PEAK_FLOPS,
+    MachineSpec,
+    get_machine,
+    synthetic_machine,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS"):
+        env.setdefault(var, "1")
+    return env
+
+
+# ---------------------------------------------------------- decomposition ---
+
+def test_generalized_decomposition_is_flop_exact():
+    from repro.expressions.generalized import FAMILIES
+
+    for fam in ("gram", "distributive", "solve", "bilinear"):
+        for n in (32, 64, 100):
+            table = FAMILIES[fam](n=n).flops_table()
+            kernels = decompose_generalized(fam, n)
+            assert set(kernels) == set(table)
+            for alg, ks in kernels.items():
+                assert sum(k.flops for k in ks) == pytest.approx(
+                    table[alg], rel=1e-12
+                ), (fam, alg)
+
+
+def test_chain_decomposition_is_flop_exact():
+    from repro.expressions.chain import generate_chain_algorithms
+
+    dims = (37, 91, 12, 55, 73)
+    kernels = decompose_chain_dims(dims)
+    algs = generate_chain_algorithms(dims)
+    assert set(kernels) == {a.name for a in algs}
+    for a in algs:
+        assert sum(k.flops for k in kernels[a.name]) == float(a.flops)
+        assert all(k.op == "gemm" for k in kernels[a.name])
+        assert len(kernels[a.name]) == a.n_products
+
+
+def test_kernel_spec_compact_roundtrip_and_labels():
+    k = KernelSpec("gemm", (8, 4, 2))
+    assert KernelSpec.from_compact(k.to_compact()) == k
+    assert k.label == "gemm[8,4,2]"
+    assert k.flops == 2.0 * 8 * 4 * 2
+    assert kernel_name("alg0", 1, k) == "alg0::01.gemm"
+    with pytest.raises(ValueError):
+        KernelSpec("quantum_gemm", (8,))
+
+
+def test_kernels_from_record_pointer_and_fallbacks():
+    rec = {"family": "bilinear", "size": 32}
+    by_alg = kernels_from_record(rec)                     # family fallback
+    assert set(by_alg) == {"bilinear_left", "bilinear_right"}
+    rec2 = {"family": "chain", "dims": [8, 4, 2, 6], "size": 5}
+    assert kernels_from_record(rec2)                      # dims fallback
+    rec3 = {"family": "bilinear", "size": 32,
+            "params": {"size": 32, "seed": 0},
+            "kernels": {"only": [["gemv", [32, 32]]]}}
+    assert set(kernels_from_record(rec3)) == {"only"}     # pointer wins
+    # an EMPTY pointer (chunk built pre-pointer, recorded post-upgrade)
+    # must fall through to params, not return nothing
+    rec4 = {"family": "bilinear", "size": 32, "kernels": {},
+            "params": {"size": 32, "seed": 0}}
+    assert set(kernels_from_record(rec4)) == {"bilinear_left", "bilinear_right"}
+
+
+# ---------------------------------------------------- machines / roofline ---
+
+def test_machine_registry_and_backcompat_aliases():
+    tpu = get_machine("tpu-v5e")
+    assert tpu is DEFAULT_MACHINE
+    assert PEAK_FLOPS == tpu.peak_flops and HBM_BW == tpu.hbm_bw
+    assert get_machine("cpu-1core").dispatch_overhead_s > 0
+    with pytest.raises(KeyError):
+        get_machine("abacus")
+    rt = MachineSpec.from_dict(tpu.to_dict())
+    assert rt == tpu
+
+
+def test_synthetic_machine_predicts_pure_compute():
+    m = synthetic_machine("sweep:test", 5e10)
+    k = KernelSpec("gemm", (64, 64, 64))
+    t, bound = kernel_roofline(k, m)
+    assert t == pytest.approx(k.flops / 5e10)
+    assert bound == "compute"
+    # no memory system: bytes never dominate
+    assert m.t_memory(1e18) == 0.0
+
+
+def test_memory_bound_detection():
+    m = MachineSpec("mem-starved", peak_flops=1e15, hbm_bw=1e6)
+    t, bound = kernel_roofline(KernelSpec("gemv", (64, 64)), m)
+    assert bound == "memory"
+
+
+# -------------------------------------------------------------- classify ---
+
+def _attr(alg, t_total, rows, machine):
+    kernels = [KernelSpec(op, tuple(shape)) for op, shape, _ in rows]
+    times = {
+        kernel_name(alg, i, k): t for i, (k, (_, _, t)) in
+        enumerate(zip(kernels, rows))
+    }
+    return attribute_algorithm(alg, t_total, kernels, times, machine)
+
+
+def test_pick_winner_loser_both_reasons():
+    base = {
+        "uid": "u", "min_flops_algs": ["a0", "a1"],
+        "ranks": {"a0": 1, "a1": 2, "b": 1},
+        "mean_ranks": {"a0": 1.2, "a1": 2.0, "b": 1.0},
+    }
+    w, l = pick_winner_loser({**base, "reason": "min_flops_split"})
+    assert (w, l) == ("b", "a1")  # best rank, then best mean rank, wins
+    rec1 = {
+        "uid": "u", "reason": "faster_outside_min_flops",
+        "min_flops_algs": ["a0"],
+        "ranks": {"a0": 2, "b": 1}, "mean_ranks": {"a0": 2.0, "b": 1.0},
+    }
+    assert pick_winner_loser(rec1) == ("b", "a0")
+    with pytest.raises(ValueError):
+        pick_winner_loser({
+            "uid": "u", "reason": "none", "min_flops_algs": ["a0"],
+            "ranks": {"a0": 1, "b": 2}, "mean_ranks": {"a0": 1.0, "b": 2.0},
+        })
+
+
+def test_classify_kernel_efficiency_and_dispatch():
+    m = synthetic_machine("s", 1e9)
+    rec = {"uid": "u", "reason": "faster_outside_min_flops"}
+    # loser's single kernel runs 2x over the roof; winner at the roof
+    w = _attr("w", 1.0e-3, [("gemm", (100, 100, 50), 1.0e-3)], m)
+    l = _attr("l", 2.0e-3, [("gemm", (100, 100, 50), 2.0e-3)], m)
+    e = classify_anomaly(rec, w, l)
+    assert e.cause == "shape_kernel_efficiency"
+    assert e.offending_algorithm == "l"
+    assert e.offending_kernel == "gemm[100,100,50]"
+    assert e.evidence == pytest.approx(1.0)
+    # same kernels, but the gap lives between kernels (residual)
+    l2 = _attr("l", 3.0e-3, [("gemm", (100, 100, 50), 1.0e-3)], m)
+    e2 = classify_anomaly(rec, w, l2)
+    assert e2.cause == "dispatch_overhead"
+    assert e2.offending_kernel is None
+    # memory-bound offender
+    mm = MachineSpec("m", peak_flops=1e15, hbm_bw=1e6)
+    w3 = _attr("w", 1.0e-3, [("gemv", (64, 64), 1.0e-3)], mm)
+    l3 = _attr("l", 9.0e-3, [("gemv", (64, 64), 9.0e-3)], mm)
+    e3 = classify_anomaly(rec, w3, l3)
+    assert e3.cause == "memory_bound_segment"
+    # no gap: honest unexplained
+    e4 = classify_anomaly(rec, l, w)
+    assert e4.cause == "unexplained" and e4.evidence == 0.0
+
+
+# --------------------------------------------- the census under explanation ---
+
+#: Deterministic cost-model census with strong injected per-algorithm
+#: efficiency factors (eff_sigma) and weak measurement noise — the
+#: acceptance scenario's ground truth.
+def _census_spec(**overrides):
+    kwargs = dict(
+        name="t",
+        families={
+            "chain": {"count": 20, "n_matrices": [3, 4], "lo": 24, "hi": 128},
+            "bilinear": {"sizes": [32, 64], "per_size": 4},
+        },
+        n_shards=2,
+        backend="cost_model",
+        eff_sigma=0.25,
+        noise_sigma=0.01,
+        max_measurements=9,
+        chunk_size=4,
+        save_every=5,
+    )
+    kwargs.update(overrides)
+    return SweepSpec(**kwargs)
+
+
+@pytest.fixture(scope="module")
+def census(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("census"))
+    spec = _census_spec()
+    spec.save(os.path.join(root, "spec.json"))
+    for s in range(spec.n_shards):
+        run_shard(spec, root, s)
+    records = merge_shards(spec, root)
+    anomalies = [r for r in records if r["is_anomaly"]]
+    assert len(anomalies) >= 5, "fixture census must produce anomalies"
+    return root, spec, records
+
+
+def test_census_records_carry_explain_pointers(census):
+    _, spec, records = census
+    for r in records:
+        assert r["params"], r["uid"]
+        assert r["base_seed"] == spec.base_seed
+        assert set(r["flops"]) == set(r["kernels"])
+        # the pointer reproduces the pure-function decomposition
+        assert r["kernels"] == {
+            alg: [k.to_compact() for k in ks]
+            for alg, ks in decompose_instance(r["family"], r["params"]).items()
+        }
+
+
+def test_explainer_recovers_injected_cause(census, tmp_path):
+    """Acceptance: >= 90% of anomalies classified as shape-dependent kernel
+    efficiency with the offending kernel identified, against the ground
+    truth reconstructed from the synthetic machine's injected factors."""
+    root, spec, records = census
+    espec = ExplainSpec(census=root, n_shards=2, chunk_size=4, save_every=5)
+    eroot = str(tmp_path / "explain")
+    for s in range(espec.n_shards):
+        run_explain_shard(espec, eroot, s)
+    explained = merge_explained(espec, eroot)
+    anomalies = [r for r in records if r["is_anomaly"]]
+    assert [e["uid"] for e in explained] == [r["uid"] for r in anomalies]
+
+    by_uid = {r["uid"]: r for r in records}
+    n_cause = n_kernel = 0
+    for e in explained:
+        assert e["cause"] in CAUSES
+        assert 0.0 <= e["evidence"] <= 1.0
+        rec = by_uid[e["uid"]]
+        if e["cause"] != "shape_kernel_efficiency":
+            continue
+        n_cause += 1
+        # ground truth: redraw the injected efficiency factors and find the
+        # kernel with the largest expected deviation from the roofline
+        eff = synthetic_efficiencies(
+            rec["flops"],
+            np.random.default_rng([rec["base_seed"], rec["index"], 1]),
+            spec.eff_sigma,
+        )
+        kernels = kernels_from_record(rec)
+        expected = max(
+            (
+                (abs(k.flops * (eff[alg] - 1.0)), alg, k.label)
+                for alg in (e["winner"], e["loser"])
+                for k in kernels[alg]
+            ),
+            key=lambda t: t[0],
+        )
+        if (e["offending_algorithm"], e["offending_kernel"]) == expected[1:]:
+            n_kernel += 1
+    assert n_cause >= 0.9 * len(explained), (n_cause, len(explained))
+    assert n_kernel >= 0.9 * n_cause, (n_kernel, n_cause)
+
+
+def test_explain_resume_is_bit_identical(census, tmp_path):
+    root, _, _ = census
+    espec = ExplainSpec(census=root, n_shards=2, chunk_size=3, save_every=3)
+    straight, chopped = str(tmp_path / "a"), str(tmp_path / "b")
+    run_explain_shard(espec, straight, 0)
+    for _ in range(300):
+        run_explain_shard(espec, chopped, 0, max_steps=3)
+        manifest = os.path.join(chopped, "shard-0000.manifest.json")
+        if (os.path.exists(manifest)
+                and json.load(open(manifest)).get("done")):
+            break
+    else:
+        pytest.fail("explain shard did not finish in 300 slices")
+    assert (open(os.path.join(chopped, "shard-0000.jsonl")).read()
+            == open(os.path.join(straight, "shard-0000.jsonl")).read())
+
+
+def test_explain_targets_and_progress(census, tmp_path):
+    root, _, records = census
+    espec = ExplainSpec(census=root, n_shards=3)
+    _, targets = explain_targets(espec)
+    assert [t["uid"] for t in targets] == [
+        r["uid"] for r in records if r["is_anomaly"]
+    ]
+    eroot = str(tmp_path / "explain")
+    prog = explain_progress(espec, eroot)
+    assert prog["anomalies"] == len(targets) and prog["completed"] == 0
+    run_explain_shard(espec, eroot, 1)
+    prog = explain_progress(espec, eroot)
+    assert prog["completed"] == prog["shards"][1]["done"] > 0
+
+
+def test_resolve_machine_follows_backend(census):
+    root, spec, _ = census
+    espec = ExplainSpec(census=root)
+    m = resolve_machine(espec, spec)
+    assert m.peak_flops == spec.flop_rate and m.hbm_bw == 0.0
+    espec2 = ExplainSpec(census=root, machine="tpu-v5e")
+    assert resolve_machine(espec2, spec).name == "tpu-v5e"
+    wall = _census_spec(backend="wall_clock")
+    assert resolve_machine(espec, wall).name == "cpu-1core"
+
+
+def test_explain_summary_and_tables(census, tmp_path):
+    root, _, _ = census
+    espec = ExplainSpec(census=root, n_shards=1)
+    eroot = str(tmp_path / "explain")
+    run_explain_shard(espec, eroot, 0)
+    explained = merge_explained(espec, eroot)
+    s = explain_summary(explained)
+    assert s["total"] == len(explained)
+    assert abs(sum(a["share"] for a in s["by_cause"].values()) - 1.0) < 1e-9
+    assert 0.0 <= s["mean_evidence"] <= 1.0
+
+    from repro.launch.report_md import explain_tables
+
+    md = explain_tables(explained, name="t")
+    assert "anomaly root causes" in md
+    assert "| cause |" in md and "shape_kernel_efficiency" in md
+
+
+# -------------------------------------------------------- CLI + kill/resume ---
+
+#: Census grid for the CLI tests: enough anomalies that a mid-run SIGKILL
+#: lands while explain shards are in flight.
+CLI_CENSUS = [
+    "--chains", "40", "--chain-sizes", "3,4", "--lo", "24", "--hi", "160",
+    "--families", "bilinear", "--sizes", "32,64", "--per-size", "6",
+    "--shards", "4", "--eff-sigma", "0.3", "--noise-sigma", "0.01",
+    "--max-measurements", "9", "--chunk-size", "4", "--save-every", "5",
+]
+#: eps < 0 never converges: every explanation runs its full measurement
+#: budget, keeping the campaign long enough to kill deterministically.
+CLI_EXPLAIN = ["--eps", "-1.0", "--max-measurements", "24",
+               "--shards", "4", "--chunk-size", "2", "--save-every", "4"]
+
+
+def _cli(module, args, **kwargs):
+    cmd = [sys.executable, "-m", module] + args
+    return subprocess.run(
+        cmd, env=_env(), capture_output=True, text=True, timeout=300, **kwargs
+    )
+
+
+@pytest.fixture(scope="module")
+def cli_census(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("cli") / "census")
+    done = _cli("repro.launch.sweep",
+                ["run", "--out", out, "--workers", "2"] + CLI_CENSUS)
+    assert done.returncode == 0, done.stderr
+    return out
+
+
+def test_cli_kill_resume_explain_identical(cli_census, tmp_path):
+    """The acceptance scenario: multi-worker explain, SIGKILL of the whole
+    process group mid-campaign, resume, merged explanations identical to an
+    uninterrupted run."""
+    straight, killed = str(tmp_path / "straight"), str(tmp_path / "killed")
+
+    done = _cli("repro.launch.explain",
+                ["run", "--census", cli_census, "--out", straight,
+                 "--workers", "2"] + CLI_EXPLAIN)
+    assert done.returncode == 0, done.stderr
+    n_anoms = open(os.path.join(straight, "merged.jsonl")).read().count("\n")
+    assert n_anoms >= 8, "census produced too few anomalies; enlarge CLI_CENSUS"
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.explain", "run",
+         "--census", cli_census, "--out", killed, "--workers", "2"]
+        + CLI_EXPLAIN,
+        env=_env(), start_new_session=True,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+    try:
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            jsonls = [f for f in os.listdir(killed)
+                      if f.endswith(".jsonl")] if os.path.isdir(killed) else []
+            if any(os.path.getsize(os.path.join(killed, f)) > 0 for f in jsonls):
+                break
+            time.sleep(0.005)
+        was_running = proc.poll() is None
+        os.killpg(proc.pid, signal.SIGKILL)
+    finally:
+        proc.wait()
+    assert was_running, "explain finished before the kill; enlarge the grid"
+
+    resumed = _cli("repro.launch.explain",
+                   ["run", "--out", killed, "--workers", "2"])
+    assert resumed.returncode == 0, resumed.stderr
+    assert (open(os.path.join(killed, "merged.jsonl")).read()
+            == open(os.path.join(straight, "merged.jsonl")).read())
+
+    report = _cli("repro.launch.explain", ["report", "--out", killed])
+    assert report.returncode == 0, report.stderr
+    assert "anomaly root causes" in report.stdout
+
+
+def test_cli_status_merge_and_plan_guard(cli_census, tmp_path):
+    out = str(tmp_path / "explain")
+    plan = _cli("repro.launch.explain",
+                ["plan", "--census", cli_census, "--out", out, "--shards", "2"])
+    assert plan.returncode == 0, plan.stderr
+    assert "anomaly explanations over 2 shards" in plan.stdout
+    # out == census would interleave census and explain shard files
+    clash = _cli("repro.launch.explain",
+                 ["plan", "--census", cli_census, "--out", cli_census])
+    assert clash.returncode != 0
+    run = _cli("repro.launch.explain", ["run", "--out", out, "--workers", "2"])
+    assert run.returncode == 0, run.stderr
+    status = _cli("repro.launch.explain", ["status", "--out", out])
+    assert status.returncode == 0 and "anomalies explained" in status.stdout
+    merge = _cli("repro.launch.explain", ["merge", "--out", out])
+    assert merge.returncode == 0 and "explanations ->" in merge.stdout
+    rj = _cli("repro.launch.explain", ["report", "--out", out, "--json"])
+    assert rj.returncode == 0
+    summary = json.loads(rj.stdout)
+    assert summary["total"] > 0 and "by_cause" in summary
+
+
+def test_sweep_status_reports_running_anomaly_counts(cli_census):
+    status = _cli("repro.launch.sweep", ["status", "--out", cli_census])
+    assert status.returncode == 0, status.stderr
+    assert "anomalies so far:" in status.stdout
+    assert "chain=" in status.stdout and "bilinear=" in status.stdout
