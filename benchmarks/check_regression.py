@@ -1,0 +1,170 @@
+"""Benchmark regression gate — fail CI when throughput drops.
+
+Compares freshly produced ``benchmarks/run.py --json`` artifacts against
+the committed ``BENCH_*.json`` baselines, row by row (rows are matched by
+``name``; ``us_per_call`` is the per-unit cost, lower = faster), and fails
+when any matched row regressed by more than ``--threshold`` (default 30%,
+wide enough to absorb host-to-host jitter between the baseline box and a
+CI runner while still catching an accidental O(n) -> O(n^2) slip).
+
+    # locally, after producing fresh artifacts
+    PYTHONPATH=src python -m benchmarks.run --only sweep \
+        --json bench_artifacts/BENCH_sweep.json
+    python -m benchmarks.check_regression \
+        --pair BENCH_sweep.json bench_artifacts/BENCH_sweep.json
+
+Rows only one side has (renamed benchmarks, different worker counts) are
+reported and skipped; an empty intersection is an error — a gate that
+matches nothing must not pass silently. ``*.ERROR`` rows in the fresh file
+fail the gate outright.
+
+The FRESH side of a ``--pair`` may be a comma-separated list of artifacts
+from repeated runs; rows are min-merged per name (best of N). Absolute
+wall-clock comparisons across hosts are noisy — a CI runner under a load
+spike can lose 30% on one run without any code regression — and taking
+the best of two runs gates on the machine's demonstrated capability
+instead of one sample.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Sequence, Tuple
+
+DEFAULT_THRESHOLD = 0.30
+
+
+def _rows_by_name(payload: Dict[str, Any]) -> Dict[str, float]:
+    """name -> us_per_call for the numeric, non-error rows."""
+    out: Dict[str, float] = {}
+    for row in payload.get("rows", []):
+        name = str(row.get("name", ""))
+        us = row.get("us_per_call")
+        if name.endswith(".ERROR") or not isinstance(us, (int, float)):
+            continue
+        if us <= 0:
+            continue
+        out[name] = float(us)
+    return out
+
+
+def compare(
+    baseline: Dict[str, Any],
+    fresh: Dict[str, Any],
+    threshold: float = DEFAULT_THRESHOLD,
+) -> List[Dict[str, Any]]:
+    """Row-by-row verdicts for one (baseline, fresh) artifact pair.
+
+    Returns one dict per matched name: ``{name, base_us, fresh_us, ratio,
+    regressed}`` where ``ratio`` is fresh/base (1.0 = unchanged, higher =
+    slower) and ``regressed`` means ratio > 1 + threshold.
+    """
+    base_rows = _rows_by_name(baseline)
+    fresh_rows = _rows_by_name(fresh)
+    out: List[Dict[str, Any]] = []
+    for name in sorted(set(base_rows) & set(fresh_rows)):
+        ratio = fresh_rows[name] / base_rows[name]
+        out.append({
+            "name": name,
+            "base_us": base_rows[name],
+            "fresh_us": fresh_rows[name],
+            "ratio": ratio,
+            "regressed": ratio > 1.0 + threshold,
+        })
+    return out
+
+
+def fresh_errors(fresh: Dict[str, Any]) -> List[str]:
+    """Names of error rows in a fresh artifact (always a gate failure)."""
+    return [
+        str(r.get("name"))
+        for r in fresh.get("rows", [])
+        if str(r.get("name", "")).endswith(".ERROR")
+    ]
+
+
+def merge_best_of(payloads: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Min-merge the rows of repeated runs by name (best of N). Error rows
+    survive only when a name errored in EVERY run — a benchmark that
+    succeeded once both proved itself and produced a comparable number."""
+    best: Dict[str, float] = {}
+    for p in payloads:
+        for name, us in _rows_by_name(p).items():
+            best[name] = min(best.get(name, us), us)
+    errors = set.intersection(
+        *[set(fresh_errors(p)) for p in payloads]
+    ) if payloads else set()
+    rows = [{"name": n, "us_per_call": us, "derived": ""}
+            for n, us in sorted(best.items())]
+    rows += [{"name": n, "us_per_call": 0, "derived": ""}
+             for n in sorted(errors)]
+    return {"schema": 1, "rows": rows}
+
+
+def check_pair(
+    baseline_path: str, fresh_path: str, threshold: float
+) -> Tuple[bool, List[str]]:
+    """(ok, report lines) for one artifact pair. ``fresh_path`` may be a
+    comma-separated list of repeated-run artifacts (min-merged)."""
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    fresh_paths = [p for p in fresh_path.split(",") if p]
+    payloads = []
+    for p in fresh_paths:
+        with open(p) as fh:
+            payloads.append(json.load(fh))
+    fresh = payloads[0] if len(payloads) == 1 else merge_best_of(payloads)
+    lines: List[str] = [f"# {fresh_path} vs baseline {baseline_path}"]
+    ok = True
+    errors = fresh_errors(fresh)
+    for name in errors:
+        lines.append(f"FAIL {name}: fresh benchmark errored")
+        ok = False
+    rows = compare(baseline, fresh, threshold)
+    if not rows and not errors:
+        lines.append("FAIL no rows matched between baseline and fresh "
+                     "artifact — the gate compared nothing")
+        ok = False
+    base_only = set(_rows_by_name(baseline)) - {r["name"] for r in rows}
+    fresh_only = set(_rows_by_name(fresh)) - {r["name"] for r in rows}
+    for name in sorted(base_only):
+        lines.append(f"skip {name}: only in baseline")
+    for name in sorted(fresh_only):
+        lines.append(f"skip {name}: only in fresh artifact")
+    for r in rows:
+        verdict = "FAIL" if r["regressed"] else "ok  "
+        lines.append(
+            f"{verdict} {r['name']}: {r['base_us']:.0f}us -> "
+            f"{r['fresh_us']:.0f}us (x{r['ratio']:.2f}, "
+            f"limit x{1.0 + threshold:.2f})"
+        )
+        if r["regressed"]:
+            ok = False
+    return ok, lines
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--pair", nargs=2, action="append", required=True,
+        metavar=("BASELINE", "FRESH"),
+        help="baseline JSON and freshly produced JSON (repeatable; FRESH "
+        "may be a comma list of repeated runs, min-merged per row)",
+    )
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed fractional slowdown (0.30 = 30%%)")
+    args = ap.parse_args(argv)
+    all_ok = True
+    for baseline_path, fresh_path in args.pair:
+        ok, lines = check_pair(baseline_path, fresh_path, args.threshold)
+        print("\n".join(lines))
+        all_ok = all_ok and ok
+    print(f"# regression gate: {'PASS' if all_ok else 'FAIL'} "
+          f"(threshold {args.threshold:.0%})")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -127,6 +127,25 @@ class SweepSpec:
     noise_sigma: float = 0.02
     bimodal_shift: float = 0.0
     bimodal_prob: float = 0.0
+    #: fraction of instances whose measurement distributions go bimodal
+    #: (turbo/frequency regime ground truth for the explainer's
+    #: mode-mixture test). 1.0 = every instance (the historical behaviour
+    #: when bimodal_prob > 0); the per-instance gate draws from entropy
+    #: stream 4, so which instances are bimodal is reconstructible from
+    #: (base_seed, index) alone.
+    bimodal_frac: float = 1.0
+    #: inter-kernel cache-reuse injection: with probability
+    #: ``cache_reuse_frac`` (per algorithm, entropy stream 5) an
+    #: algorithm's *whole-run* time is cut by ``cache_reuse_saving`` —
+    #: adjacent kernels sharing cache — while its isolated kernel segments
+    #: keep their full cost, so the explainer sees a negative residual.
+    cache_reuse_frac: float = 0.0
+    cache_reuse_saving: float = 0.0
+    #: fixed per-kernel-launch overhead (seconds) the synthetic machine
+    #: charges between kernels of a whole-algorithm run AND once per
+    #: isolated segment — at tiny sizes this dominates and algorithms with
+    #: more kernels lose (the paper's dispatch-bound regime).
+    dispatch_s: float = 0.0
     # campaign (Procedure 4 / engine)
     m_per_iteration: int = 3
     eps: float = 0.03
@@ -148,6 +167,14 @@ class SweepSpec:
             raise ValueError(f"unknown backend {self.backend!r}; one of {BACKENDS}")
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if not 0.0 <= self.bimodal_frac <= 1.0:
+            raise ValueError("bimodal_frac must be in [0, 1]")
+        if not 0.0 <= self.cache_reuse_frac <= 1.0:
+            raise ValueError("cache_reuse_frac must be in [0, 1]")
+        if not 0.0 <= self.cache_reuse_saving < 1.0:
+            raise ValueError("cache_reuse_saving must be in [0, 1)")
+        if self.dispatch_s < 0.0:
+            raise ValueError("dispatch_s must be >= 0")
         unknown = set(self.families) - set(FAMILIES)
         if unknown:
             raise ValueError(f"unknown families {sorted(unknown)}; one of {FAMILIES}")
@@ -277,6 +304,88 @@ def synthetic_costs(
     }
 
 
+def synthetic_cache_reuse(
+    names: Iterable[str],
+    rng: np.random.Generator,
+    reuse_frac: float,
+    reuse_saving: float,
+) -> Dict[str, float]:
+    """Per-algorithm whole-run saving fractions from inter-kernel cache
+    reuse, drawn in sorted-name order (same reproducibility contract as
+    :func:`synthetic_efficiencies`: replaying the RNG over the same names
+    recovers the ground truth). An algorithm with a nonzero saving runs its
+    *whole* program ``1 - saving`` times the sum of its kernel costs —
+    adjacent kernels hand data over in cache — which the explainer observes
+    as a negative attribution residual."""
+    if reuse_frac <= 0.0 or reuse_saving <= 0.0:
+        return {name: 0.0 for name in sorted(names)}
+    return {
+        name: reuse_saving if float(rng.random()) < reuse_frac else 0.0
+        for name in sorted(names)
+    }
+
+
+@dataclass(frozen=True)
+class SyntheticInstanceModel:
+    """Everything the synthetic machine decided about ONE instance, rebuilt
+    purely from ``(spec knobs, base_seed, index)`` — the census measures
+    through it, and the explainer reconstructs it as ground truth."""
+
+    costs: Dict[str, float]            #: whole-algorithm predicted seconds
+    efficiencies: Dict[str, float]     #: per-algorithm lognormal factors
+    cache_saving: Dict[str, float]     #: per-algorithm whole-run saving
+    bimodal: bool                      #: does this instance's timer go bimodal?
+
+
+def synthetic_instance_model(
+    spec: SweepSpec,
+    index: int,
+    flops: Mapping[str, float],
+    kernel_counts: Optional[Mapping[str, int]] = None,
+    base_seed: Optional[int] = None,
+) -> SyntheticInstanceModel:
+    """The synthetic machine's frozen per-instance state. Entropy streams:
+    1 = efficiency factors, 4 = bimodal gate, 5 = cache-reuse coins (2/3
+    belong to the measurement-noise/shuffle seeds; the explainer uses 11+).
+    Streams are only consumed when their knob is active, so censuses with
+    default knobs stay byte-identical to pre-knob ones.
+
+    Whole-algorithm cost = ``flops/rate * eff * (1 - cache_saving)`` plus
+    ``dispatch_s`` per kernel; isolated segments (the explainer's
+    re-measurement) cost ``kernel_flops/rate * eff`` plus ONE dispatch each,
+    so dispatch cancels in the residual while cache reuse surfaces as a
+    negative one."""
+    base = spec.base_seed if base_seed is None else int(base_seed)
+    eff = synthetic_efficiencies(
+        flops, np.random.default_rng([base, int(index), 1]), spec.eff_sigma
+    )
+    reuse = synthetic_cache_reuse(
+        flops,
+        np.random.default_rng([base, int(index), 5]),
+        spec.cache_reuse_frac,
+        spec.cache_reuse_saving,
+    )
+    bimodal = spec.bimodal_prob > 0.0 and spec.bimodal_shift != 0.0
+    if bimodal and spec.bimodal_frac < 1.0:
+        gate = np.random.default_rng([base, int(index), 4])
+        bimodal = float(gate.random()) < spec.bimodal_frac
+    costs: Dict[str, float] = {}
+    for name in sorted(flops):
+        c = float(flops[name]) / spec.flop_rate * eff[name]
+        if reuse[name] > 0.0:
+            c *= 1.0 - reuse[name]
+        if spec.dispatch_s > 0.0:
+            if kernel_counts is None:
+                raise ValueError(
+                    "dispatch_s > 0 needs per-algorithm kernel counts"
+                )
+            c += spec.dispatch_s * int(kernel_counts[name])
+        costs[name] = c
+    return SyntheticInstanceModel(
+        costs=costs, efficiencies=eff, cache_saving=reuse, bimodal=bimodal
+    )
+
+
 def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
     """(flops table, descriptive meta, workload-builder thunk) for a chain
     instance. Expression generators are imported lazily so cost-model
@@ -336,25 +445,27 @@ def instance_entry(inst: InstanceSpec):
 
 
 def build_timer(spec: SweepSpec, inst: InstanceSpec, flops: Mapping[str, float],
-                build_workloads: Callable[[], Dict[str, Callable[[], Any]]]) -> Timer:
+                build_workloads: Callable[[], Dict[str, Callable[[], Any]]],
+                kernel_counts: Optional[Mapping[str, int]] = None) -> Timer:
     """The instance's measurement backend, fully derived from the spec."""
     if spec.backend == "wall_clock":
         return WallClockTimer(build_workloads())
-    eff_rng = np.random.default_rng(_instance_entropy(spec, inst, 1))
-    costs = synthetic_costs(flops, eff_rng, spec.flop_rate, spec.eff_sigma)
+    model = synthetic_instance_model(spec, inst.index, flops, kernel_counts)
     noise_seed = np.random.default_rng(
         _instance_entropy(spec, inst, 2)
     ).integers(0, 2**63 - 1)
     if spec.backend == "cost_model":
-        return CostModelTimer(costs, rel_sigma=spec.noise_sigma, seed=int(noise_seed))
+        return CostModelTimer(
+            model.costs, rel_sigma=spec.noise_sigma, seed=int(noise_seed)
+        )
     profiles = {
         name: NoiseProfile(
             base=cost,
             rel_sigma=spec.noise_sigma,
-            bimodal_shift=spec.bimodal_shift,
-            bimodal_prob=spec.bimodal_prob,
+            bimodal_shift=spec.bimodal_shift if model.bimodal else 0.0,
+            bimodal_prob=spec.bimodal_prob if model.bimodal else 0.0,
         )
-        for name, cost in costs.items()
+        for name, cost in model.costs.items()
     }
     return SimulatedTimer(profiles, seed=int(noise_seed))
 
@@ -366,7 +477,8 @@ def build_sweep_session(spec: SweepSpec, inst: InstanceSpec) -> MeasurementSessi
     in ``session.meta`` so the discriminant verdict survives engine
     save/load without re-deriving the instance."""
     flops, desc, build_workloads = instance_entry(inst)
-    timer = build_timer(spec, inst, flops, build_workloads)
+    kernel_counts = {alg: len(ks) for alg, ks in desc["kernels"].items()}
+    timer = build_timer(spec, inst, flops, build_workloads, kernel_counts)
     single = {name: timer.measure(name) for name in flops}
     cand = filter_candidates(
         flops, single,

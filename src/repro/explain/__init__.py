@@ -14,10 +14,19 @@ against a per-kernel roofline floor:
   measured segment time over the :class:`~repro.roofline.MachineSpec`
   roofline prediction, rolled up into whole-algorithm attributions with a
   dispatch/overhead residual.
+* :mod:`repro.explain.distributions` — distribution-level statistics over
+  the segment samples: the 2-means mode-mixture test (turbo/frequency
+  regimes) and the median-gap significance behind the re-ranking probe.
 * :mod:`repro.explain.classify` — the cause taxonomy
   (``shape_kernel_efficiency`` / ``memory_bound_segment`` /
-  ``dispatch_overhead`` / ``unexplained``) with a numeric evidence score:
-  the fraction of the winner/loser time gap the chosen cause explains.
+  ``dispatch_overhead`` / ``frequency_bimodality`` / ``cache_reuse_pair``
+  / ``not_reproducible`` / ``unexplained``) with a numeric evidence score
+  per cause (gap fraction explained, distribution share, or probe flip
+  probability — see the module docstring).
+* :mod:`repro.explain.calibrate` — per-machine dispatch/GEMM-efficiency
+  calibration from micro-measurements, so tiny-instance memory-vs-dispatch
+  splits reconcile against the floor the machine actually has. CLI:
+  ``python -m repro.launch.explain calibrate``.
 * :mod:`repro.explain.runner` — :class:`ExplainSpec` + sharded, resumable
   explanation campaigns on the :class:`~repro.core.engine.ExperimentEngine`
   (kill/resume byte-identical for the deterministic census backends),
@@ -29,8 +38,23 @@ cost-model explanation workers stay as light as census workers.
 """
 
 from .attribution import AlgorithmAttribution, KernelAttribution, attribute_algorithm
+from .calibrate import (
+    CalibrationResult,
+    fit_calibration,
+    load_calibrated_machine,
+    micro_points_synthetic,
+    micro_points_wall_clock,
+    synthetic_truth,
+)
 from .classify import CAUSES, Explanation, classify_anomaly
 from .decompose import KernelSpec, decompose_instance, kernels_from_record
+from .distributions import (
+    ModeMixture,
+    SessionBimodality,
+    median_gap_zscore,
+    mode_mixture,
+    session_bimodality,
+)
 from .runner import (
     ExplainSpec,
     build_explain_session,
@@ -38,16 +62,20 @@ from .runner import (
     explain_summary,
     explain_targets,
     merge_explained,
+    reranking_probe,
     run_explain_shard,
 )
 
 __all__ = [
     "AlgorithmAttribution",
     "CAUSES",
+    "CalibrationResult",
     "Explanation",
     "ExplainSpec",
     "KernelAttribution",
     "KernelSpec",
+    "ModeMixture",
+    "SessionBimodality",
     "attribute_algorithm",
     "build_explain_session",
     "classify_anomaly",
@@ -55,7 +83,16 @@ __all__ = [
     "explain_progress",
     "explain_summary",
     "explain_targets",
+    "fit_calibration",
     "kernels_from_record",
+    "load_calibrated_machine",
+    "median_gap_zscore",
     "merge_explained",
+    "micro_points_synthetic",
+    "micro_points_wall_clock",
+    "mode_mixture",
+    "reranking_probe",
     "run_explain_shard",
+    "session_bimodality",
+    "synthetic_truth",
 ]

@@ -23,7 +23,7 @@ cannot see (dispatch, allocator, framework overhead between kernels).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Mapping, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.roofline.terms import MachineSpec
 
@@ -47,6 +47,7 @@ class KernelAttribution:
     t_measured: float       # median isolated segment time (seconds)
     t_roofline: float
     bound: str              # "compute" | "memory"
+    t_dispatch: float = 0.0  # dispatch part of t_roofline (calibrated)
 
     @property
     def efficiency(self) -> float:
@@ -70,6 +71,7 @@ class KernelAttribution:
             "flops": self.kernel.flops,
             "t_measured": self.t_measured,
             "t_roofline": self.t_roofline,
+            "t_dispatch": self.t_dispatch,
             "efficiency": self.efficiency,
             "excess": self.excess,
             "bound": self.bound,
@@ -103,12 +105,41 @@ class AlgorithmAttribution:
         between adjacent kernels when negative)."""
         return self.t_total - self.t_kernel_sum
 
+    @property
+    def t_dispatch_sum(self) -> float:
+        """Calibrated dispatch part of the roofline sum — what the machine
+        charges just for launching this algorithm's kernels."""
+        return sum(k.t_dispatch for k in self.kernels)
+
+    def t_bound_sum(self, bound: str) -> float:
+        """Roofline time (minus dispatch) carried by kernels sitting on one
+        roof (``"compute"`` or ``"memory"``) — the calibrated
+        memory-vs-dispatch split of the hardware floor."""
+        return sum(
+            k.t_roofline - k.t_dispatch for k in self.kernels
+            if k.bound == bound
+        )
+
     def worst_kernel(self) -> KernelAttribution:
         """The segment farthest above its roofline floor (ties: first in
         execution order, deterministically)."""
         best = max(range(len(self.kernels)),
                    key=lambda i: (self.kernels[i].excess, -i))
         return self.kernels[best]
+
+    def cache_pair(self) -> Optional[Tuple[KernelAttribution, KernelAttribution]]:
+        """The adjacent kernel pair most plausibly sharing cache: the pair
+        whose handed-over intermediate (the first kernel's result) is
+        largest, because that is the memory traffic a fused/cache-resident
+        execution saves. None for single-kernel algorithms. Ties break to
+        the earliest pair, deterministically."""
+        if len(self.kernels) < 2:
+            return None
+        best = max(
+            range(len(self.kernels) - 1),
+            key=lambda i: (self.kernels[i].kernel.out_bytes, -i),
+        )
+        return self.kernels[best], self.kernels[best + 1]
 
     def row(self) -> Dict[str, Any]:
         return {
@@ -142,6 +173,7 @@ def attribute_algorithm(
                 t_measured=float(segment_times[name]),
                 t_roofline=t_pred,
                 bound=bound,
+                t_dispatch=machine.dispatch_overhead_s,
             )
         )
     return AlgorithmAttribution(

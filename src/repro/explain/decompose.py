@@ -56,6 +56,19 @@ _OPS: Dict[str, Tuple[Callable[..., float], Callable[..., float]]] = {
              lambda n: float(_ELEM_BYTES) * (n * n + 2 * n)),
 }
 
+#: op -> result elements (the intermediate a following kernel may reuse).
+_OUT_ELEMS: Dict[str, Callable[..., float]] = {
+    "gemm": lambda m, k, n: float(m * n),
+    "syrk": lambda n, k: float(n * n),
+    "gemv": lambda m, n: float(m),
+    "dot": lambda n: 1.0,
+    "add": lambda m, n: float(m * n),
+    "inv": lambda n: float(n * n),
+    "getrf": lambda n: float(n * n),
+    "potrf": lambda n: float(n * n),
+    "trsv": lambda n: float(n),
+}
+
 
 @dataclass(frozen=True)
 class KernelSpec:
@@ -75,6 +88,13 @@ class KernelSpec:
     @property
     def bytes(self) -> float:
         return _OPS[self.op][1](*self.shape)
+
+    @property
+    def out_bytes(self) -> float:
+        """Bytes of the kernel's result — the working set a directly
+        following kernel can pick up from cache instead of memory (the
+        cache-reuse pair scoring in :mod:`repro.explain.attribution`)."""
+        return float(_ELEM_BYTES) * _OUT_ELEMS[self.op](*self.shape)
 
     @property
     def label(self) -> str:

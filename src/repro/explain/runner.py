@@ -38,12 +38,19 @@ from repro.core.sweep import (
     instance_entry,
     merge_shards,
     run_chunked_campaign,
-    synthetic_efficiencies,
+    synthetic_instance_model,
 )
 from repro.roofline.terms import MachineSpec, get_machine, synthetic_machine
 
 from .attribution import AlgorithmAttribution, attribute_algorithm
-from .classify import classify_anomaly, pick_winner_loser
+from .calibrate import load_calibrated_machine
+from .classify import (
+    DEFAULT_FLIP_MIN_PROB,
+    DEFAULT_FLIP_Z,
+    classify_anomaly,
+    pick_winner_loser,
+)
+from .distributions import median_gap_zscore, session_bimodality
 from .decompose import (
     KernelSpec,
     build_kernel_workload,
@@ -75,7 +82,17 @@ class ExplainSpec:
     #: MachineSpec registry name; empty = derive from the census backend
     #: (synthetic machine for cost_model/simulated, cpu-1core for wall_clock)
     machine: str = ""
+    #: path to a ``calibrate`` output file; overrides ``machine`` with the
+    #: fitted dispatch/efficiency-curve spec
+    machine_file: str = ""
     min_evidence: float = 0.5
+    #: re-ranking confidence probe: when the winner/loser median gap is
+    #: non-positive or below ``flip_z`` standard errors, re-measure both
+    #: under the census protocol ``flip_probes`` times and report the flip
+    #: probability (the ``not_reproducible`` evidence).
+    flip_probes: int = 16
+    flip_z: float = DEFAULT_FLIP_Z
+    flip_min_prob: float = DEFAULT_FLIP_MIN_PROB
     base_seed: int = 0
     fsync: bool = False
 
@@ -84,6 +101,8 @@ class ExplainSpec:
             raise ValueError("n_shards must be >= 1")
         if not 0.0 <= self.min_evidence <= 1.0:
             raise ValueError("min_evidence must be in [0, 1]")
+        if self.flip_probes < 1:
+            raise ValueError("flip_probes must be >= 1")
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -137,10 +156,13 @@ def shard_targets(espec: ExplainSpec, targets: Sequence[Mapping[str, Any]],
 
 
 def resolve_machine(espec: ExplainSpec, sweep_spec: SweepSpec) -> MachineSpec:
-    """The roofline floor's hardware: explicit registry pick, else derived
-    from the census backend (the synthetic machine IS the cost-model
-    census's hardware — predictions of flops/flop_rate make the recovered
-    per-kernel efficiencies equal the injected factors)."""
+    """The roofline floor's hardware: a calibrated machine file first, then
+    an explicit registry pick, else derived from the census backend (the
+    synthetic machine IS the cost-model census's hardware — predictions of
+    flops/flop_rate make the recovered per-kernel efficiencies equal the
+    injected factors)."""
+    if espec.machine_file:
+        return load_calibrated_machine(espec.machine_file)
     if espec.machine:
         return get_machine(espec.machine)
     if sweep_spec.backend in ("cost_model", "simulated"):
@@ -190,32 +212,55 @@ def _measurement_names(
     return names
 
 
+def _record_instance_model(
+    sweep_spec: SweepSpec,
+    record: Mapping[str, Any],
+    all_kernels: Optional[Mapping[str, Sequence[KernelSpec]]] = None,
+):
+    """The synthetic machine's per-instance ground truth, rebuilt from the
+    record's ``base_seed``/``index``/``flops``/``kernels`` pointers (same
+    RNG streams the census consumed — see
+    :func:`repro.core.sweep.synthetic_instance_model`). ``all_kernels`` is
+    the record's full per-algorithm decomposition when the caller already
+    parsed it."""
+    flops = _record_flops(sweep_spec, record)
+    if all_kernels is None:
+        all_kernels = kernels_from_record(record)
+    kernel_counts = {alg: len(ks) for alg, ks in all_kernels.items()}
+    return synthetic_instance_model(
+        sweep_spec,
+        int(record["index"]),
+        flops,
+        kernel_counts,
+        base_seed=int(record.get("base_seed", sweep_spec.base_seed)),
+    )
+
+
 def _synthetic_segment_costs(
     sweep_spec: SweepSpec,
     record: Mapping[str, Any],
     involved: Sequence[str],
     kernels: Mapping[str, Sequence[KernelSpec]],
-) -> Dict[str, float]:
-    """True segment costs on the synthetic machine: the injected
-    per-algorithm efficiency factor (reconstructed from the census
-    ``base_seed``/``flops`` pointers via the same sorted-name RNG draw)
-    applied to each kernel's share of the algorithm's FLOPs. Kernel costs
-    sum to the whole-algorithm cost the census measured, modulo the
-    analytic FLOP split."""
-    flops = _record_flops(sweep_spec, record)
-    eff_rng = np.random.default_rng([
-        int(record.get("base_seed", sweep_spec.base_seed)),
-        int(record["index"]), 1,
-    ])
-    eff = synthetic_efficiencies(flops, eff_rng, sweep_spec.eff_sigma)
+    all_kernels: Optional[Mapping[str, Sequence[KernelSpec]]] = None,
+) -> Tuple[Dict[str, float], bool]:
+    """(true costs per measured name, bimodal flag) on the synthetic
+    machine. Whole-algorithm costs come straight from the reconstructed
+    instance model (injected efficiency x cache-reuse saving + per-kernel
+    dispatch — exactly what the census measured); each isolated segment
+    costs its kernel's FLOP share at the algorithm's efficiency plus ONE
+    dispatch. Cache reuse is deliberately *absent* from the segments (an
+    isolated kernel has nobody to share cache with), which is how the
+    injected reuse surfaces as a negative attribution residual."""
+    model = _record_instance_model(sweep_spec, record, all_kernels)
     costs: Dict[str, float] = {}
     for alg in involved:
-        costs[alg] = flops[alg] / sweep_spec.flop_rate * eff[alg]
+        costs[alg] = model.costs[alg]
         for i, k in enumerate(kernels[alg]):
-            costs[kernel_name(alg, i, k)] = (
-                k.flops / sweep_spec.flop_rate * eff[alg]
-            )
-    return costs
+            c = k.flops / sweep_spec.flop_rate * model.efficiencies[alg]
+            if sweep_spec.dispatch_s > 0.0:
+                c += sweep_spec.dispatch_s
+            costs[kernel_name(alg, i, k)] = c
+    return costs, model.bimodal
 
 
 def _build_timer(
@@ -224,12 +269,15 @@ def _build_timer(
     record: Mapping[str, Any],
     involved: Sequence[str],
     kernels: Mapping[str, Sequence[KernelSpec]],
+    all_kernels: Optional[Mapping[str, Sequence[KernelSpec]]] = None,
 ) -> Timer:
     if sweep_spec.backend == "wall_clock":
         return WallClockTimer(
             _wall_clock_workloads(sweep_spec, record, involved, kernels)
         )
-    costs = _synthetic_segment_costs(sweep_spec, record, involved, kernels)
+    costs, bimodal = _synthetic_segment_costs(
+        sweep_spec, record, involved, kernels, all_kernels
+    )
     noise_seed = int(
         np.random.default_rng(_entropy(espec, record, 11)).integers(0, 2**63 - 1)
     )
@@ -241,8 +289,8 @@ def _build_timer(
         name: NoiseProfile(
             base=cost,
             rel_sigma=sweep_spec.noise_sigma,
-            bimodal_shift=sweep_spec.bimodal_shift,
-            bimodal_prob=sweep_spec.bimodal_prob,
+            bimodal_shift=sweep_spec.bimodal_shift if bimodal else 0.0,
+            bimodal_prob=sweep_spec.bimodal_prob if bimodal else 0.0,
         )
         for name, cost in costs.items()
     }
@@ -308,7 +356,8 @@ def build_explain_session(
     all_kernels = kernels_from_record(record)
     kernels = {winner: all_kernels[winner], loser: all_kernels[loser]}
     names = _measurement_names(winner, loser, kernels)
-    timer = _build_timer(espec, sweep_spec, record, (winner, loser), kernels)
+    timer = _build_timer(espec, sweep_spec, record, (winner, loser), kernels,
+                         all_kernels)
     machine = resolve_machine(espec, sweep_spec)
     shuffle_seed = int(
         np.random.default_rng(_entropy(espec, record, 13)).integers(0, 2**31 - 1)
@@ -332,6 +381,9 @@ def build_explain_session(
             "kernels": kernels_to_compact(kernels),
             "machine": machine.to_dict(),
             "backend": sweep_spec.backend,
+            #: the census's batch size — the re-ranking probe replays the
+            #: census protocol, not the explain campaign's
+            "census_m": sweep_spec.m_per_iteration,
         },
     )
 
@@ -346,12 +398,42 @@ def _median_times(session: MeasurementSession) -> Dict[str, float]:
     }
 
 
+def reranking_probe(
+    session: MeasurementSession,
+    winner: str,
+    loser: str,
+    m: int,
+    n_probes: int,
+) -> float:
+    """Flip probability of the census winner/loser order under the census
+    protocol: ``n_probes`` fresh batches of ``m`` measurements per
+    algorithm, each batch re-ranked by median. Returns the fraction of
+    probes where the loser measures no slower than the winner — the
+    confidence that the census ranking was a noise artifact.
+
+    The probe continues the session's own timer stream (deterministic for
+    the cost_model/simulated backends), and only runs after the session
+    has finished measuring, so kill/resume byte-identity is preserved: a
+    resumed chunk replays to the same final timer state and draws the same
+    probe samples."""
+    timer = session.timer
+    m = max(1, int(m))
+    flips = 0
+    for _ in range(max(1, int(n_probes))):
+        w = float(np.median(timer.measure_many(winner, m)))
+        l = float(np.median(timer.measure_many(loser, m)))
+        if l <= w:
+            flips += 1
+    return flips / max(1, int(n_probes))
+
+
 def record_from_explain_session(
     session: MeasurementSession, espec: ExplainSpec
 ) -> Dict[str, Any]:
     """One explanation JSONL record. Deterministic-fields-only, like the
-    census records: medians of deterministic draws, analytic rooflines —
-    a resumed explain run merges byte-identical."""
+    census records: medians of deterministic draws, analytic rooflines,
+    distribution statistics of deterministic samples — a resumed explain
+    run merges byte-identical."""
     meta = session.meta
     machine = MachineSpec.from_dict(meta["machine"])
     kernels = kernels_from_compact(meta["kernels"])
@@ -363,8 +445,30 @@ def record_from_explain_session(
         )
         for alg in (winner, loser)
     }
+    bimodality = session_bimodality(
+        {name: session.store.row(name) for name in session.store.names()}
+    )
+    gap, _, z = median_gap_zscore(
+        session.store.row(winner), session.store.row(loser)
+    )
+    flip_p: Optional[float] = None
+    if not bimodality.is_bimodal and (gap <= 0 or z < espec.flip_z):
+        flip_p = reranking_probe(
+            session, winner, loser,
+            # the census's batch size (falling back to the explain
+            # campaign's for pre-census_m sessions): the probe measures
+            # whether the CENSUS protocol reproduces its own ranking
+            m=int(meta.get("census_m", espec.m_per_iteration)),
+            n_probes=espec.flip_probes,
+        )
     expl = classify_anomaly(
-        meta, attrs[winner], attrs[loser], min_evidence=espec.min_evidence
+        meta, attrs[winner], attrs[loser],
+        min_evidence=espec.min_evidence,
+        bimodality=bimodality,
+        flip_probability=flip_p,
+        gap_zscore=z,
+        flip_z=espec.flip_z,
+        flip_min_prob=espec.flip_min_prob,
     )
     out = {
         "uid": meta["uid"],
@@ -376,6 +480,9 @@ def record_from_explain_session(
         "measurements_per_alg": session.measurements_per_alg,
         "iterations": session.iterations,
         "converged": session.converged,
+        "gap_zscore": z if np.isfinite(z) else None,
+        "flip_probability": flip_p,
+        "bimodality": bimodality.to_dict(),
         "attribution": {
             "winner": attrs[winner].row(),
             "loser": attrs[loser].row(),

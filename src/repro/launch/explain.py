@@ -65,8 +65,19 @@ def add_campaign_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--machine", default="",
                    help="MachineSpec registry name for the roofline floor "
                    "(default: derived from the census backend)")
+    g.add_argument("--machine-file", default="",
+                   help="calibration JSON from the `calibrate` subcommand; "
+                   "overrides --machine with the fitted "
+                   "dispatch/efficiency-curve spec")
     g.add_argument("--min-evidence", type=float, default=0.5,
                    help="fraction of the time gap a cause must explain")
+    g.add_argument("--flip-probes", type=int, default=16,
+                   help="re-ranking probe batches behind not_reproducible")
+    g.add_argument("--flip-z", type=float, default=3.0,
+                   help="median-gap z below which the probe runs")
+    g.add_argument("--flip-min-prob", type=float, default=0.25,
+                   help="minimum probed flip probability before an "
+                   "insignificant gap counts as not_reproducible")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--fsync", action="store_true")
 
@@ -98,7 +109,13 @@ def load_or_plan_spec(args: argparse.Namespace, *, announce: bool = True) -> Exp
         chunk_size=args.chunk_size,
         save_every=args.save_every,
         machine=args.machine,
+        machine_file=(
+            os.path.abspath(args.machine_file) if args.machine_file else ""
+        ),
         min_evidence=args.min_evidence,
+        flip_probes=args.flip_probes,
+        flip_z=args.flip_z,
+        flip_min_prob=args.flip_min_prob,
         base_seed=args.seed,
         fsync=args.fsync,
     )
@@ -217,6 +234,58 @@ def cmd_merge(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_calibrate(args: argparse.Namespace) -> int:
+    """Fit a machine's dispatch/GEMM-efficiency curve from
+    micro-measurements and save it for ``run --machine-file``."""
+    import dataclasses
+
+    from repro.explain.calibrate import (
+        DEFAULT_SIZES,
+        calibration_table,
+        fit_calibration,
+        micro_points_synthetic,
+        micro_points_wall_clock,
+        synthetic_truth,
+    )
+    from repro.roofline.terms import MachineSpec, get_machine
+
+    if args.peak_flops:
+        # a custom-peak spec is NOT the registry machine: only carry the
+        # --machine name over when the caller explicitly chose one
+        base = MachineSpec(
+            name=args.machine if args.machine is not None else "custom",
+            peak_flops=args.peak_flops,
+            hbm_bw=args.hbm_bw,
+        )
+    else:
+        base = get_machine(args.machine if args.machine is not None
+                           else "cpu-1core")
+    sizes = _int_list(args.sizes) if args.sizes else list(DEFAULT_SIZES)
+    if args.backend == "wall_clock":
+        points = micro_points_wall_clock(sizes, reps=args.reps, seed=args.seed)
+    else:
+        truth = synthetic_truth(
+            base,
+            dispatch_s=args.truth_dispatch_us * 1e-6,
+            eff_knee=args.truth_eff_knee,
+            sizes=sizes,
+        )
+        points = micro_points_synthetic(
+            truth, sizes, reps=args.reps, seed=args.seed,
+            rel_sigma=args.truth_noise,
+        )
+    # fit against the dispatch-free nominal spec: dispatch is an OUTPUT
+    result = fit_calibration(
+        dataclasses.replace(base, dispatch_overhead_s=0.0, eff_curve=()),
+        points,
+    )
+    print(calibration_table(result))
+    path = result.save(args.out_file)
+    print(f"# calibration -> {path} (pass --machine-file {path} to "
+          "plan/run/report)")
+    return 0
+
+
 def cmd_report(args: argparse.Namespace) -> int:
     from repro.launch.report_md import explain_tables
 
@@ -268,6 +337,38 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = sub.add_parser("merge", help="merge shard JSONLs into merged.jsonl")
     p.add_argument("--out", required=True)
     p.set_defaults(fn=cmd_merge)
+
+    p = sub.add_parser(
+        "calibrate",
+        help="fit a machine's dispatch/GEMM-efficiency curve from "
+        "micro-measurements (for run --machine-file)",
+    )
+    p.add_argument("--out-file", required=True,
+                   help="where to save the calibration JSON")
+    p.add_argument("--machine", default=None,
+                   help="base MachineSpec registry name (default cpu-1core; "
+                   "with --peak-flops: the custom spec's name, default "
+                   "'custom')")
+    p.add_argument("--peak-flops", type=float, default=None,
+                   help="build a custom base spec at this peak instead of "
+                   "--machine (e.g. a census's synthetic flop_rate)")
+    p.add_argument("--hbm-bw", type=float, default=0.0,
+                   help="bytes/s of the custom base spec (with --peak-flops)")
+    p.add_argument("--backend", default="wall_clock",
+                   choices=["wall_clock", "synthetic"],
+                   help="synthetic = deterministic draws from a known "
+                   "ground-truth machine (tests/CI)")
+    p.add_argument("--sizes", default="",
+                   help="comma list of GEMM ladder sizes (default 8..256)")
+    p.add_argument("--reps", type=int, default=25)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--truth-dispatch-us", type=float, default=2.0,
+                   help="synthetic backend: ground-truth dispatch (us)")
+    p.add_argument("--truth-eff-knee", type=float, default=64.0,
+                   help="synthetic backend: eff(n)=n/(n+knee); 0 = flat")
+    p.add_argument("--truth-noise", type=float, default=0.02,
+                   help="synthetic backend: lognormal measurement noise")
+    p.set_defaults(fn=cmd_calibrate)
 
     p = sub.add_parser("report", help="cause tables (markdown)")
     p.add_argument("--out", required=True)

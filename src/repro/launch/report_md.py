@@ -95,14 +95,21 @@ def explain_tables(records, name: str = "explain") -> str:
     top = sorted(records, key=lambda r: (-float(r["evidence"]), r["index"]))[:5]
     if top:
         out += ["", "### Highest-evidence examples", "",
-                "| uid | reason | cause | evidence | offending kernel | "
-                "gap |", "|---|---|---|---|---|---|"]
+                "| uid | reason | cause | evidence | offending kernel/pair | "
+                "gap | gap z | flip p | modes |",
+                "|---|---|---|---|---|---|---|---|---|"]
         for r in top:
+            z = r.get("gap_zscore")
+            flip = r.get("flip_probability")
+            modes = (r.get("bimodality") or {}).get("share")
             out.append(
                 f"| {r['uid']} | {r['reason']} | {r['cause']} | "
                 f"{float(r['evidence']):.2f} | "
                 f"{r.get('offending_kernel') or '—'} | "
-                f"{100.0 * float(r['gap_rel']):.1f}% |"
+                f"{100.0 * float(r['gap_rel']):.1f}% | "
+                f"{f'{float(z):.1f}' if z is not None else '—'} | "
+                f"{f'{float(flip):.2f}' if flip is not None else '—'} | "
+                f"{f'{100.0 * float(modes):.0f}%' if modes is not None else '—'} |"
             )
     return "\n".join(out) + "\n"
 

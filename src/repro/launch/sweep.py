@@ -81,6 +81,18 @@ def add_grid_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--noise-sigma", type=float, default=0.02)
     g.add_argument("--bimodal-shift", type=float, default=0.0)
     g.add_argument("--bimodal-prob", type=float, default=0.0)
+    g.add_argument("--bimodal-frac", type=float, default=1.0,
+                   help="fraction of instances whose simulated timer goes "
+                   "bimodal (turbo-regime ground truth; 1.0 = all)")
+    g.add_argument("--cache-reuse-frac", type=float, default=0.0,
+                   help="per-algorithm probability of an injected "
+                   "inter-kernel cache-reuse saving")
+    g.add_argument("--cache-reuse-saving", type=float, default=0.0,
+                   help="whole-run fraction saved by an injected "
+                   "cache-reuse effect")
+    g.add_argument("--dispatch-s", type=float, default=0.0,
+                   help="synthetic per-kernel dispatch overhead (seconds); "
+                   "dominates tiny instances")
     g.add_argument("--m-per-iteration", type=int, default=3)
     g.add_argument("--eps", type=float, default=0.03)
     g.add_argument("--max-measurements", type=int, default=24)
@@ -118,6 +130,10 @@ def spec_from_args(args: argparse.Namespace) -> SweepSpec:
         noise_sigma=args.noise_sigma,
         bimodal_shift=args.bimodal_shift,
         bimodal_prob=args.bimodal_prob,
+        bimodal_frac=args.bimodal_frac,
+        cache_reuse_frac=args.cache_reuse_frac,
+        cache_reuse_saving=args.cache_reuse_saving,
+        dispatch_s=args.dispatch_s,
         m_per_iteration=args.m_per_iteration,
         eps=args.eps,
         max_measurements=args.max_measurements,

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Mapping, Optional
+import math
+from typing import Dict, Mapping, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +38,14 @@ class MachineSpec:
     dispatch + runtime) added on top of the compute/memory bound — zero for
     within-one-XLA-program analysis, nonzero when predicting sequences of
     separately dispatched kernels (the AnomalyExplainer's segment model).
+
+    ``eff_curve`` is an optional calibrated GEMM-efficiency curve: sorted
+    ``(flops, fraction_of_peak)`` anchor points fitted from
+    micro-measurements (:mod:`repro.explain.calibrate`). Real machines
+    reach nowhere near peak on tiny kernels — a µs-scale n=32 GEMM runs
+    10-70x off the nominal roofline — so :meth:`t_compute` divides by the
+    log-interpolated achieved rate instead of raw peak whenever a curve is
+    present. Empty curve = nominal peak (the historical behaviour).
     """
 
     name: str
@@ -44,9 +53,41 @@ class MachineSpec:
     hbm_bw: float                     # bytes/s
     ici_bw: float = 0.0               # bytes/s/link (0: no interconnect)
     dispatch_overhead_s: float = 0.0  # seconds per dispatched kernel
+    eff_curve: Tuple[Tuple[float, float], ...] = ()  # (flops, frac of peak)
+
+    def __post_init__(self) -> None:
+        # JSON round-trips turn the curve into nested lists; normalise so
+        # from_dict(to_dict(spec)) == spec holds (frozen: bypass setattr)
+        curve = tuple(
+            sorted((float(f), float(e)) for f, e in self.eff_curve)
+        )
+        object.__setattr__(self, "eff_curve", curve)
+        if any(e <= 0.0 for _, e in curve):
+            raise ValueError(f"eff_curve efficiencies must be > 0: {curve}")
+
+    def efficiency_at(self, flops: float) -> float:
+        """Calibrated fraction of peak achieved by a kernel of ``flops``:
+        piecewise log-linear in flops between anchor points, clamped at the
+        curve's ends. 1.0 when no curve is fitted."""
+        curve = self.eff_curve
+        if not curve:
+            return 1.0
+        if flops <= curve[0][0]:
+            return curve[0][1]
+        if flops >= curve[-1][0]:
+            return curve[-1][1]
+        for (f0, e0), (f1, e1) in zip(curve, curve[1:]):
+            if f0 <= flops <= f1:
+                if f1 <= f0:
+                    return e1
+                w = (math.log(flops) - math.log(f0)) / (
+                    math.log(f1) - math.log(f0)
+                )
+                return e0 + w * (e1 - e0)
+        return curve[-1][1]  # pragma: no cover - loop covers the range
 
     def t_compute(self, flops: float) -> float:
-        return flops / self.peak_flops
+        return flops / (self.peak_flops * self.efficiency_at(flops))
 
     def t_memory(self, nbytes: float) -> float:
         if self.hbm_bw <= 0:
