@@ -11,16 +11,24 @@ then runs the SAME explanation campaign through
 (fresh state directories, subprocess workers — the real deployment path).
 The two runs also cross-check the subsystem's determinism: the merged
 explanation files must be byte-identical regardless of worker count.
+
+Per-stage attribution rows (``explain.stage.decompose`` / ``.measure`` /
+``.classify``, in us per anomaly) come from the shard runners' sidecar
+timings files of the 1-worker run — when explain throughput regresses,
+these rows say WHICH stage ate the time, and the regression gate matches
+them by name like any other row.
 """
 
 from __future__ import annotations
 
+import glob
+import json
 import os
 import subprocess
 import sys
 import tempfile
 import time
-from typing import List
+from typing import Dict, List
 
 
 def _census_flags(smoke: bool) -> List[str]:
@@ -57,6 +65,22 @@ def _env() -> dict:
     for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
         env.setdefault(var, "1")
     return env
+
+
+def _stage_totals(state_dir: str) -> Dict[str, float]:
+    """Sum the per-stage wall seconds over a run's shard timings sidecars
+    (written by the explain shard runner next to each shard's records)."""
+    totals: Dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(state_dir, "shard-*.timings.json"))):
+        try:
+            with open(path) as fh:
+                shard = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        for key, val in shard.items():
+            if isinstance(val, (int, float)):
+                totals[key] = totals.get(key, 0.0) + float(val)
+    return totals
 
 
 def _run(cmd: List[str]) -> float:
@@ -96,7 +120,9 @@ def run(smoke: bool, out: List[str], ctx=None) -> None:
         n = merged_single.count("\n")
         if n == 0:
             raise AssertionError("census produced no anomalies to explain")
+        stages = _stage_totals(single_dir)
 
+    cores = os.cpu_count() or 1
     epm_single = n / t_single * 60.0
     epm_multi = n / t_multi * 60.0
     out.append(
@@ -106,5 +132,18 @@ def run(smoke: bool, out: List[str], ctx=None) -> None:
     out.append(
         f"explain.{multi}workers,{t_multi / n * 1e6:.0f},"
         f"{n} anomalies in {t_multi:.1f}s = {epm_multi:.0f} explanations/min; "
-        f"speedup=x{t_single / t_multi:.2f}; explanations byte-identical"
+        f"speedup=x{t_single / t_multi:.2f} on {cores} cores; "
+        f"explanations byte-identical"
     )
+    in_stages = sum(stages.get(f"{s}_s", 0.0)
+                    for s in ("decompose", "measure", "classify", "append"))
+    for stage in ("decompose", "measure", "classify"):
+        secs = stages.get(f"{stage}_s", 0.0)
+        if secs <= 0.0:
+            continue
+        share = secs / in_stages * 100.0 if in_stages > 0 else 0.0
+        out.append(
+            f"explain.stage.{stage},{secs / n * 1e6:.0f},"
+            f"{secs:.2f}s over {n} anomalies = {share:.0f}% of staged work "
+            f"(1-worker run)"
+        )

@@ -8,8 +8,14 @@ worker processes. This module runs the SAME deterministic cost-model grid
 through ``python -m repro.launch.sweep run`` with 1 worker and with N
 workers (fresh state directories, subprocess workers — the real deployment
 path, jax import cost and all) and reports both throughputs and the
-speedup. The two runs also cross-check the subsystem's determinism: the
-merged censuses must be byte-identical regardless of worker count.
+speedup, plus a third drain through the pull-based work queue
+(``python -m repro.launch.queue run --hosts 2`` — two simulated hosts
+leasing shards dynamically). All runs cross-check the subsystem's
+determinism: the merged censuses must be byte-identical regardless of
+worker/host count. Speedups are bounded by the box's physical cores (the
+derived text records the count): on a 1-core sandbox two hosts time-slice
+one core and the multi-process rows show the coordination overhead, not
+the scaling — CI's multi-core runners show the real curve.
 """
 
 from __future__ import annotations
@@ -40,44 +46,81 @@ def _grid_flags(smoke: bool) -> List[str]:
     ]
 
 
-def _run_sweep(out_dir: str, workers: int, smoke: bool) -> float:
-    """One full census run; returns wall seconds (workers included)."""
+def _env() -> dict:
     env = dict(os.environ)
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
     env["PYTHONPATH"] = os.pathsep.join(dict.fromkeys(parts))
+    return env
+
+
+def _checked(cmd: List[str], env: dict) -> None:
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"{' '.join(cmd[2:5])} failed ({proc.returncode}): "
+            f"{proc.stderr[-500:]}"
+        )
+
+
+def _run_sweep(out_dir: str, workers: int, smoke: bool) -> float:
+    """One full census run; returns wall seconds (workers included)."""
     cmd = [
         sys.executable, "-m", "repro.launch.sweep", "run",
         "--out", out_dir, "--workers", str(workers),
     ] + _grid_flags(smoke)
     t0 = time.time()
-    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
-    elapsed = time.time() - t0
-    if proc.returncode != 0:
-        raise RuntimeError(
-            f"sweep run failed ({proc.returncode}): {proc.stderr[-500:]}"
-        )
-    return elapsed
+    _checked(cmd, _env())
+    return time.time() - t0
+
+
+def _run_queue(out_dir: str, hosts: int, smoke: bool) -> float:
+    """One full census drain through the pull-based work queue with
+    ``hosts`` simulated hosts; returns wall seconds (plan included, like
+    ``sweep run`` — both rows carry the same fixed costs)."""
+    env = _env()
+    t0 = time.time()
+    _checked(
+        [sys.executable, "-m", "repro.launch.sweep", "plan",
+         "--out", out_dir] + _grid_flags(smoke),
+        env,
+    )
+    _checked(
+        [sys.executable, "-m", "repro.launch.queue", "run",
+         "--out", out_dir, "--hosts", str(hosts), "--poll", "0.2"],
+        env,
+    )
+    return time.time() - t0
 
 
 def run(smoke: bool, out: List[str], ctx=None) -> None:
     multi = 2 if smoke else 4
+    hosts = 2
+    cores = os.cpu_count() or 1
     with tempfile.TemporaryDirectory(prefix="bench_sweep_") as tmp:
         single_dir = os.path.join(tmp, "w1")
         multi_dir = os.path.join(tmp, f"w{multi}")
+        queue_dir = os.path.join(tmp, f"h{hosts}")
         t_single = _run_sweep(single_dir, 1, smoke)
         t_multi = _run_sweep(multi_dir, multi, smoke)
+        t_queue = _run_queue(queue_dir, hosts, smoke)
 
         merged_single = open(os.path.join(single_dir, "merged.jsonl")).read()
         merged_multi = open(os.path.join(multi_dir, "merged.jsonl")).read()
+        merged_queue = open(os.path.join(queue_dir, "merged.jsonl")).read()
         if merged_single != merged_multi:
             raise AssertionError(
                 "census differs between 1-worker and multi-worker runs"
+            )
+        if merged_single != merged_queue:
+            raise AssertionError(
+                "census differs between 1-worker and work-queue runs"
             )
         n = merged_single.count("\n")
 
     ipm_single = n / t_single * 60.0
     ipm_multi = n / t_multi * 60.0
+    ipm_queue = n / t_queue * 60.0
     out.append(
         f"sweep.1worker,{t_single / n * 1e6:.0f},"
         f"{n} instances in {t_single:.1f}s = {ipm_single:.0f} instances/min"
@@ -85,5 +128,12 @@ def run(smoke: bool, out: List[str], ctx=None) -> None:
     out.append(
         f"sweep.{multi}workers,{t_multi / n * 1e6:.0f},"
         f"{n} instances in {t_multi:.1f}s = {ipm_multi:.0f} instances/min; "
-        f"speedup=x{t_single / t_multi:.2f}; census byte-identical"
+        f"speedup=x{t_single / t_multi:.2f} on {cores} cores; "
+        f"census byte-identical"
+    )
+    out.append(
+        f"sweep.{hosts}hosts,{t_queue / n * 1e6:.0f},"
+        f"{n} instances in {t_queue:.1f}s = {ipm_queue:.0f} instances/min "
+        f"via work queue; speedup=x{t_single / t_queue:.2f} on {cores} "
+        f"cores; census byte-identical"
     )

@@ -86,18 +86,25 @@ def fresh_errors(fresh: Dict[str, Any]) -> List[str]:
 
 
 def merge_best_of(payloads: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
-    """Min-merge the rows of repeated runs by name (best of N). Error rows
-    survive only when a name errored in EVERY run — a benchmark that
+    """Min-merge the rows of repeated runs by name (best of N), keeping the
+    winning run's ``derived`` text (the human-readable context — instance
+    counts, speedups — belongs to the run that produced the number). Error
+    rows survive only when a name errored in EVERY run — a benchmark that
     succeeded once both proved itself and produced a comparable number."""
-    best: Dict[str, float] = {}
+    best: Dict[str, Tuple[float, str]] = {}
     for p in payloads:
+        derived = {
+            str(r.get("name", "")): str(r.get("derived", ""))
+            for r in p.get("rows", [])
+        }
         for name, us in _rows_by_name(p).items():
-            best[name] = min(best.get(name, us), us)
+            if name not in best or us < best[name][0]:
+                best[name] = (us, derived.get(name, ""))
     errors = set.intersection(
         *[set(fresh_errors(p)) for p in payloads]
     ) if payloads else set()
-    rows = [{"name": n, "us_per_call": us, "derived": ""}
-            for n, us in sorted(best.items())]
+    rows = [{"name": n, "us_per_call": us, "derived": d}
+            for n, (us, d) in sorted(best.items())]
     rows += [{"name": n, "us_per_call": 0, "derived": ""}
              for n in sorted(errors)]
     return {"schema": 1, "rows": rows}

@@ -1,0 +1,211 @@
+"""Filesystem leases — the pull-based work queue's mutual-exclusion layer.
+
+A census (or explanation campaign) stored under one shared directory is
+drained by any number of *hosts*: each host repeatedly picks an unfinished
+shard, takes its **lease**, and drives it with the existing resumable
+chunk/save/append machinery (:func:`repro.core.sweep.run_chunked_campaign`).
+The lease protocol is deliberately tiny — one JSON file per shard on the
+shared filesystem, no server, no sockets — because the hard part
+(recovering a half-done shard byte-identically) is already solved by the
+kill/resume contract: a lease takeover IS a resume.
+
+Protocol (``shard-NNNN.lease.json`` next to the shard's JSONL):
+
+* **Acquire** — atomic ``O_CREAT | O_EXCL`` create. Exactly one host wins;
+  the file body records the owner token, acquisition time, last heartbeat
+  and TTL.
+* **Heartbeat** — the owner periodically rewrites the file (atomic
+  tmp + rename), rate-limited to ``interval`` seconds. A heartbeat first
+  re-reads the file and raises :class:`LeaseLost` if another owner took
+  over — the losing host must stop writing to the shard immediately.
+* **Expiry / takeover** — a lease whose heartbeat is older than ``ttl``
+  seconds is *dead* (SIGKILLed host, lost VM, wedged process). A taker
+  breaks it by renaming the stale file to a unique name (exactly one
+  concurrent taker wins the rename) and then acquiring freshly. The new
+  owner resumes the shard from its persisted engine state, so the merged
+  result is byte-identical to an uninterrupted run (deterministic
+  backends).
+* **Release** — the owner removes the file (only if it still owns it).
+
+Failure-model fine print: clocks across hosts must agree to well within
+``ttl`` (the default 30 s tolerates ordinary NTP skew); a *live* host that
+stalls longer than ``ttl`` (GC pause, NFS hiccup) can lose its lease to a
+taker — it finds out at its next heartbeat (``LeaseLost``) and abandons
+the shard, and because record appends are guarded by a heartbeat the
+stale host never commits records after the takeover window closes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import time
+import uuid
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional
+
+#: Default seconds without a heartbeat before a lease counts as dead.
+DEFAULT_TTL = 30.0
+#: Default seconds between heartbeat file rewrites (must be << ttl).
+DEFAULT_HEARTBEAT_INTERVAL = 5.0
+
+
+class LeaseLost(RuntimeError):
+    """The shard's lease is no longer ours — stop writing, move on."""
+
+
+def default_owner() -> str:
+    """A token unique per worker process: host, pid, and a random tail
+    (two workers on one host — the CI simulation — must not collide)."""
+    return f"{socket.gethostname()}:{os.getpid()}:{uuid.uuid4().hex[:8]}"
+
+
+@dataclass(frozen=True)
+class LeaseInfo:
+    """A lease file's decoded contents (whoever owns it)."""
+
+    owner: str
+    acquired_at: float
+    heartbeat_at: float
+    ttl: float
+
+    def age(self, now: Optional[float] = None) -> float:
+        """Seconds since the last heartbeat."""
+        return (time.time() if now is None else now) - self.heartbeat_at
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return self.age(now) > self.ttl
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "owner": self.owner,
+            "acquired_at": self.acquired_at,
+            "heartbeat_at": self.heartbeat_at,
+            "ttl": self.ttl,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "LeaseInfo":
+        return cls(
+            owner=str(d["owner"]),
+            acquired_at=float(d["acquired_at"]),
+            heartbeat_at=float(d["heartbeat_at"]),
+            ttl=float(d["ttl"]),
+        )
+
+
+def read_lease(path: str) -> Optional[LeaseInfo]:
+    """The lease at ``path``, or None when absent/unreadable. A torn or
+    half-written file (possible only on filesystems without atomic rename)
+    reads as None — callers treat that like any other lease they do not
+    own, and the TTL path eventually clears it via :func:`_break_stale`."""
+    try:
+        with open(path) as fh:
+            return LeaseInfo.from_dict(json.load(fh))
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def _write_lease_file(path: str, info: LeaseInfo, *, exclusive: bool) -> None:
+    if exclusive:
+        fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        with os.fdopen(fd, "w") as fh:
+            json.dump(info.to_dict(), fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+    else:
+        tmp = f"{path}.tmp.{uuid.uuid4().hex[:8]}"
+        with open(tmp, "w") as fh:
+            json.dump(info.to_dict(), fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+
+
+def _break_stale(path: str) -> None:
+    """Remove a dead lease so the caller may retry an exclusive create.
+    Breaking races with other takers: the rename succeeds for exactly one
+    of them (the others get ENOENT and simply retry acquisition)."""
+    grave = f"{path}.stale.{uuid.uuid4().hex[:8]}"
+    try:
+        os.rename(path, grave)
+    except OSError:
+        return  # somebody else broke (or the owner released) it first
+    try:
+        os.remove(grave)
+    except OSError:
+        pass
+
+
+class Lease:
+    """A HELD lease: heartbeat it while working, release it when done."""
+
+    def __init__(self, path: str, info: LeaseInfo,
+                 interval: float = DEFAULT_HEARTBEAT_INTERVAL) -> None:
+        self.path = path
+        self.owner = info.owner
+        self.ttl = info.ttl
+        self.interval = interval
+        self._last_beat = info.heartbeat_at
+
+    def heartbeat(self, force: bool = False) -> None:
+        """Refresh the lease file (rate-limited to ``interval`` seconds;
+        ``force=True`` beats immediately — used right before record
+        appends so a takeover can never interleave with a commit).
+
+        Raises :class:`LeaseLost` when the file is gone or another owner
+        holds it — the caller must abandon the shard without writing.
+        """
+        now = time.time()
+        if not force and now - self._last_beat < self.interval:
+            return
+        current = read_lease(self.path)
+        if current is None or current.owner != self.owner:
+            raise LeaseLost(
+                f"lease {self.path} now belongs to "
+                f"{current.owner if current else 'nobody'}"
+            )
+        _write_lease_file(
+            self.path,
+            LeaseInfo(self.owner, current.acquired_at, now, self.ttl),
+            exclusive=False,
+        )
+        self._last_beat = now
+
+    def release(self) -> None:
+        """Drop the lease (no-op if it was already lost/taken over)."""
+        current = read_lease(self.path)
+        if current is not None and current.owner == self.owner:
+            try:
+                os.remove(self.path)
+            except OSError:
+                pass
+
+
+def acquire_lease(
+    path: str,
+    owner: Optional[str] = None,
+    *,
+    ttl: float = DEFAULT_TTL,
+    interval: float = DEFAULT_HEARTBEAT_INTERVAL,
+) -> Optional[Lease]:
+    """Try to take the lease at ``path``. Returns a held :class:`Lease`,
+    or None when a live owner holds it. A dead lease (heartbeat older than
+    its recorded TTL) is broken and re-acquired in the same call."""
+    owner = owner or default_owner()
+    for _ in range(2):  # second pass: after breaking a stale lease
+        now = time.time()
+        info = LeaseInfo(owner=owner, acquired_at=now, heartbeat_at=now,
+                         ttl=float(ttl))
+        try:
+            _write_lease_file(path, info, exclusive=True)
+            return Lease(path, info, interval=interval)
+        except FileExistsError:
+            pass
+        current = read_lease(path)
+        if current is not None and not current.expired():
+            return None  # a live owner holds it
+        # dead (or unreadable-and-abandoned): break it, then retry once
+        _break_stale(path)
+    return None

@@ -56,6 +56,7 @@ import dataclasses
 import json
 import math
 import os
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
@@ -573,6 +574,11 @@ class ShardStore:
     source of truth on resume — :meth:`open` truncates a torn trailing line
     (kill mid-append) and recomputes the manifest, so the completed set
     never contains a half-written record and never loses a whole one.
+
+    The manifest is *slim*: counts, committed byte length, and per-family
+    tallies — O(1) in shard size, so each append rewrites a few hundred
+    bytes instead of re-serializing every completed uid, and status polls
+    (:func:`shard_counts`) answer from it without parsing the JSONL.
     """
 
     def __init__(self, root: str, shard: int, fsync: bool = False) -> None:
@@ -582,7 +588,12 @@ class ShardStore:
         self.records_path = os.path.join(root, f"shard-{shard:04d}.jsonl")
         self.manifest_path = os.path.join(root, f"shard-{shard:04d}.manifest.json")
         self.engine_path = os.path.join(root, f"shard-{shard:04d}.engine.json")
+        self.timings_path = os.path.join(root, f"shard-{shard:04d}.timings.json")
+        self.lease_path = os.path.join(root, f"shard-{shard:04d}.lease.json")
         self._records: List[Dict[str, Any]] = []
+        self._uids: set = set()
+        self._by_family: Dict[str, Dict[str, int]] = {}
+        self._records_bytes = 0
         self._opened = False
 
     # ---------------------------------------------------------- reading ---
@@ -599,6 +610,9 @@ class ShardStore:
         if not readonly:
             os.makedirs(self.root, exist_ok=True)
         self._records = []
+        self._uids = set()
+        self._by_family = {}
+        self._records_bytes = 0
         if os.path.exists(self.records_path):
             with open(self.records_path, "rb") as fh:
                 data = fh.read()
@@ -611,7 +625,10 @@ class ShardStore:
                 except (ValueError, UnicodeDecodeError):
                     break  # corrupt line: drop it and everything after
                 self._records.append(rec)
+                self._uids.add(rec["uid"])
+                self._tally(rec)
                 good_end += len(line)
+            self._records_bytes = good_end
             if good_end < len(data) and not readonly:
                 with open(self.records_path, "r+b") as fh:
                     fh.truncate(good_end)
@@ -631,22 +648,34 @@ class ShardStore:
         if not self._opened:
             raise RuntimeError("ShardStore.open() must be called first")
 
+    def _tally(self, rec: Mapping[str, Any]) -> None:
+        fam = self._by_family.setdefault(
+            str(rec.get("family", "?")), {"done": 0, "anomalies": 0}
+        )
+        fam["done"] += 1
+        if rec.get("is_anomaly"):
+            fam["anomalies"] += 1
+
     # ---------------------------------------------------------- writing ---
 
     def append_records(self, records: Sequence[Mapping[str, Any]]) -> int:
-        """Append a batch (skipping already-present uids), fsync, refresh
-        the manifest. Returns the number actually appended."""
+        """Append a batch (skipping already-present uids) as ONE serialized
+        write, fsync if configured, refresh the slim manifest. Returns the
+        number actually appended."""
         self._ensure_open()
-        seen = set(self.completed_uids())
-        fresh = [dict(r) for r in records if r["uid"] not in seen]
+        fresh = [dict(r) for r in records if r["uid"] not in self._uids]
         if fresh:
-            with open(self.records_path, "a") as fh:
-                for r in fresh:
-                    fh.write(_record_line(r))
+            data = "".join(_record_line(r) for r in fresh)
+            with open(self.records_path, "a", encoding="utf-8") as fh:
+                fh.write(data)
                 fh.flush()
                 if self.fsync:
                     os.fsync(fh.fileno())
             self._records.extend(fresh)
+            for r in fresh:
+                self._uids.add(r["uid"])
+                self._tally(r)
+            self._records_bytes += len(data.encode("utf-8"))
         self.write_manifest()
         return len(fresh)
 
@@ -655,7 +684,8 @@ class ShardStore:
         manifest = {
             "shard": self.shard,
             "n_completed": len(self._records),
-            "completed_uids": [r["uid"] for r in self._records],
+            "records_bytes": self._records_bytes,
+            "by_family": self._by_family,
         }
         if done is not None:
             manifest["done"] = bool(done)
@@ -667,6 +697,14 @@ class ShardStore:
                 os.fsync(fh.fileno())
         os.replace(tmp, self.manifest_path)
 
+    def read_manifest(self) -> Optional[Dict[str, Any]]:
+        """The on-disk manifest (no open() needed), or None."""
+        try:
+            with open(self.manifest_path) as fh:
+                return json.load(fh)
+        except (OSError, ValueError):
+            return None
+
     # ----------------------------------------------------- engine state ---
 
     def has_engine_state(self) -> bool:
@@ -675,6 +713,89 @@ class ShardStore:
     def clear_engine_state(self) -> None:
         if os.path.exists(self.engine_path):
             os.remove(self.engine_path)
+
+    # ---------------------------------------------------------- timings ---
+
+    def add_timings(self, delta: Mapping[str, float]) -> None:
+        """Accumulate wall-clock stage timings into the shard's sidecar
+        timings file (load + add + atomic replace). Advisory only — wall
+        times live here, NOT in the records, so the JSONL stays
+        byte-identical across kills, resumes, and host takeovers."""
+        totals: Dict[str, float] = {}
+        try:
+            with open(self.timings_path) as fh:
+                totals = {k: float(v) for k, v in json.load(fh).items()}
+        except (OSError, ValueError):
+            totals = {}
+        for k, v in delta.items():
+            totals[k] = totals.get(k, 0.0) + float(v)
+        tmp = self.timings_path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(totals, fh, indent=1, sort_keys=True)
+        os.replace(tmp, self.timings_path)
+
+
+def shard_counts(store: ShardStore) -> Dict[str, Any]:
+    """Done/anomaly tallies for one shard WITHOUT parsing its whole JSONL.
+
+    Served from the slim manifest, then a tail-scan of only the bytes a
+    live worker appended past the manifest's ``records_bytes`` watermark
+    (the manifest commits after the JSONL, so the watermark always sits on
+    a committed line boundary; a torn tail line is skipped). Falls back to
+    the authoritative full parse for legacy manifests (pre-watermark
+    format) or when the file shrank under the watermark (foreign rewrite).
+    """
+    manifest = store.read_manifest()
+    legacy = (
+        manifest is None
+        or "records_bytes" not in manifest
+        or "by_family" not in manifest
+    )
+    if not legacy:
+        try:
+            size = os.path.getsize(store.records_path)
+        except OSError:
+            size = 0
+        base = int(manifest["records_bytes"])
+        if size < base:
+            legacy = True  # file shrank: manifest is stale, rescan
+    if legacy:
+        n_done = 0
+        by_family: Dict[str, Dict[str, int]] = {}
+        done_flag = bool(manifest.get("done")) if manifest else False
+        if os.path.exists(store.records_path):
+            scan = ShardStore(store.root, store.shard).open(readonly=True)
+            n_done = len(scan._records)
+            by_family = scan._by_family
+        return {"done": n_done, "by_family": by_family, "done_flag": done_flag}
+    n_done = int(manifest["n_completed"])
+    by_family = {
+        f: {"done": int(c.get("done", 0)), "anomalies": int(c.get("anomalies", 0))}
+        for f, c in manifest["by_family"].items()
+    }
+    if size > base:
+        with open(store.records_path, "rb") as fh:
+            fh.seek(base)
+            tail = fh.read()
+        for line in tail.splitlines(keepends=True):
+            if not line.endswith(b"\n"):
+                break
+            try:
+                rec = json.loads(line.decode("utf-8"))
+            except (ValueError, UnicodeDecodeError):
+                break
+            n_done += 1
+            fam = by_family.setdefault(
+                str(rec.get("family", "?")), {"done": 0, "anomalies": 0}
+            )
+            fam["done"] += 1
+            if rec.get("is_anomaly"):
+                fam["anomalies"] += 1
+    return {
+        "done": n_done,
+        "by_family": by_family,
+        "done_flag": bool(manifest.get("done", False)),
+    }
 
 
 # -------------------------------------------------------------- the runner ---
@@ -706,6 +827,8 @@ def run_chunked_campaign(
     max_steps: Optional[int] = None,
     progress: Optional[Callable[[str], None]] = None,
     label: str = "shard",
+    heartbeat: Optional[Callable[..., None]] = None,
+    timings: Optional[Dict[str, float]] = None,
 ) -> bool:
     """The shared chunk/resume/save/append driver behind every sharded
     campaign (census shards AND anomaly explanations — one copy of the
@@ -723,8 +846,23 @@ def run_chunked_campaign(
     cost_model / simulated backends). ``rebuild_timers`` re-attaches
     non-serializable (wall-clock) backends on resume. Returns True when
     every uid completed, False when paused on the ``max_steps`` budget.
+
+    ``heartbeat`` (the work-queue hook) is called once per session build
+    and engine step, and as ``heartbeat(True)`` immediately before every
+    record append — :meth:`repro.core.lease.Lease.heartbeat` fits the
+    shape. An exception it raises (``LeaseLost``) aborts the shard BEFORE
+    the commit, so a taken-over shard never gets records from two owners.
+
+    ``timings``, if given, accumulates wall-clock stage seconds in place:
+    ``build_s`` (session construction — decomposition, workload setup),
+    ``step_s`` (engine measurement + mean-rank analysis), ``record_s``
+    (record_fn — discriminant / classification), ``append_s`` (store I/O),
+    plus ``steps`` / ``records`` counts. Pure observability — nothing here
+    feeds back into measurements or records.
     """
     say = progress or (lambda msg: None)
+    beat = heartbeat or (lambda *a: None)
+    t = timings if timings is not None else {}
     completed = set(store.completed_uids())
     total = len(todo_uids)
     todo = [u for u in todo_uids if u not in completed]
@@ -750,8 +888,11 @@ def run_chunked_campaign(
             if not chunk:
                 break
             engine = ExperimentEngine(policy=policy)
+            t0 = time.perf_counter()
             for uid in chunk:
+                beat()
                 engine.add_session(build_session(uid))
+            t["build_s"] = t.get("build_s", 0.0) + (time.perf_counter() - t0)
             engine.save(store.engine_path)
             chunk_uids = engine.session_names
             say(f"{label}: new chunk of {len(chunk)} "
@@ -763,8 +904,13 @@ def run_chunked_campaign(
                 engine.save(store.engine_path)
                 say(f"{label}: paused (step budget)")
                 return False
-            if engine.step() is None:
+            beat()
+            t0 = time.perf_counter()
+            stepped = engine.step()
+            t["step_s"] = t.get("step_s", 0.0) + (time.perf_counter() - t0)
+            if stepped is None:
                 break
+            t["steps"] = t.get("steps", 0.0) + 1
             since_save += 1
             if steps_left is not None:
                 steps_left -= 1
@@ -772,8 +918,14 @@ def run_chunked_campaign(
                 engine.save(store.engine_path)
                 since_save = 0
 
+        t0 = time.perf_counter()
         records = [record_fn(engine.session(uid)) for uid in chunk_uids]
+        t["record_s"] = t.get("record_s", 0.0) + (time.perf_counter() - t0)
+        t["records"] = t.get("records", 0.0) + len(records)
+        beat(True)  # prove ownership right before the commit
+        t0 = time.perf_counter()
         store.append_records(records)
+        t["append_s"] = t.get("append_s", 0.0) + (time.perf_counter() - t0)
         store.clear_engine_state()
         completed.update(chunk_uids)
         todo = [u for u in todo if u not in completed]
@@ -790,18 +942,21 @@ def run_shard(
     *,
     max_steps: Optional[int] = None,
     progress: Optional[Callable[[str], None]] = None,
+    heartbeat: Optional[Callable[..., None]] = None,
 ) -> ShardStore:
     """Run (or resume) one shard of the census to completion — the census
     instantiation of :func:`run_chunked_campaign` (see there for the
     persistence/resume contract). ``max_steps`` bounds the engine steps
     this call takes (the shard is left resumable mid-chunk) — used by
-    tests and deadline-driven callers.
+    tests and deadline-driven callers. ``heartbeat`` is the work-queue
+    lease hook (see :func:`run_chunked_campaign`).
     """
     store = ShardStore(root, shard, fsync=spec.fsync).open()
     instances = {i.uid: i for i in spec.shard_instances(shard)}
     rebuild = None
     if spec.backend == "wall_clock":
         rebuild = lambda uids: _wall_clock_timers(spec, instances, uids)
+    timings: Dict[str, float] = {}
     run_chunked_campaign(
         store,
         list(instances),
@@ -814,7 +969,11 @@ def run_shard(
         max_steps=max_steps,
         progress=progress,
         label=f"shard {shard}",
+        heartbeat=heartbeat,
+        timings=timings,
     )
+    if timings:
+        store.add_timings(timings)
     return store
 
 
@@ -902,37 +1061,42 @@ def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
     """Completed / total per shard, plus running anomaly tallies per family
     (the ``plan``/``run``/``status`` lines). A long census surfaces its
     anomaly landscape here, before any ``merge`` — the explain subsystem's
-    "is there anything to explain yet" probe."""
+    "is there anything to explain yet" probe.
+
+    Counts come from the slim shard manifests (plus a tail-scan of records
+    appended since each manifest committed — :func:`shard_counts`), so a
+    status poll costs O(shards), not O(records): it no longer re-parses
+    every shard JSONL, and the grid is expanded once, not once per shard.
+    """
+    instances = spec.expand()
+    totals = [0] * spec.n_shards
+    for inst in instances:
+        totals[spec.shard_of(inst)] += 1
     per_shard = []
     total_done = 0
     anomalies = 0
     per_family: Dict[str, Dict[str, int]] = {}
     for shard in range(spec.n_shards):
-        n_total = len(spec.shard_instances(shard))
         store = ShardStore(root, shard)
-        n_done = 0
+        counts = shard_counts(store)
         shard_anom = 0
-        if os.path.exists(store.records_path):
-            records = store.open(readonly=True).records
-            n_done = len(records)
-            for r in records:
-                fam = per_family.setdefault(
-                    r.get("family", "?"), {"done": 0, "anomalies": 0}
-                )
-                fam["done"] += 1
-                if r.get("is_anomaly"):
-                    fam["anomalies"] += 1
-                    shard_anom += 1
+        for fam_name, fam_counts in counts["by_family"].items():
+            fam = per_family.setdefault(
+                fam_name, {"done": 0, "anomalies": 0}
+            )
+            fam["done"] += fam_counts["done"]
+            fam["anomalies"] += fam_counts["anomalies"]
+            shard_anom += fam_counts["anomalies"]
         in_flight = os.path.exists(store.engine_path)
         per_shard.append({
-            "shard": shard, "done": n_done, "total": n_total,
+            "shard": shard, "done": counts["done"], "total": totals[shard],
             "anomalies": shard_anom, "in_flight_chunk": in_flight,
         })
-        total_done += n_done
+        total_done += counts["done"]
         anomalies += shard_anom
     return {
         "name": spec.name,
-        "instances": len(spec.expand()),
+        "instances": len(instances),
         "completed": total_done,
         "anomalies": anomalies,
         "by_family": per_family,

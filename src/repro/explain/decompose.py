@@ -16,6 +16,7 @@ when a wall-clock explanation actually re-measures a kernel in isolation.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
 
 #: Bytes per element for the kernels' working precision (census workloads
@@ -137,7 +138,19 @@ def decompose_chain(dims: Sequence[int], steps: Sequence[Tuple[str, str, str]]) 
 def decompose_generalized(family: str, size: int) -> Dict[str, List[KernelSpec]]:
     """Kernel sequences of every variant of one beyond-chain family at
     ``size`` — mirrors :mod:`repro.expressions.generalized` identity by
-    identity (and is FLOP-exact against its ``flops_table``)."""
+    identity (and is FLOP-exact against its ``flops_table``). Memoized per
+    (family, size); callers get fresh list containers over the shared
+    frozen :class:`KernelSpec` values."""
+    return {
+        alg: list(ks)
+        for alg, ks in _decompose_generalized_cached(family, int(size)).items()
+    }
+
+
+@lru_cache(maxsize=4096)
+def _decompose_generalized_cached(
+    family: str, size: int
+) -> Dict[str, List[KernelSpec]]:
     n = int(size)
     if family == "gram":
         k = max(1, n // 4)  # repro.expressions.generalized.FAMILIES convention
@@ -179,7 +192,23 @@ def decompose_generalized(family: str, size: int) -> Dict[str, List[KernelSpec]]
 
 def decompose_chain_dims(dims: Sequence[int]) -> Dict[str, List[KernelSpec]]:
     """Kernels of EVERY algorithm of a chain instance (lazy import: the
-    enumeration layer is pure python)."""
+    enumeration layer is pure python). Memoized per dims tuple — an
+    explanation touches the same instance's decomposition several times
+    (session build, timer rebuild, ground-truth reconstruction), and
+    enumerating a chain's full parenthesization set is the expensive
+    part."""
+    return {
+        alg: list(ks)
+        for alg, ks in _decompose_chain_dims_cached(
+            tuple(int(d) for d in dims)
+        ).items()
+    }
+
+
+@lru_cache(maxsize=1024)
+def _decompose_chain_dims_cached(
+    dims: Tuple[int, ...]
+) -> Dict[str, List[KernelSpec]]:
     from repro.expressions.chain import generate_chain_algorithms
 
     return {
@@ -190,16 +219,26 @@ def decompose_chain_dims(dims: Sequence[int]) -> Dict[str, List[KernelSpec]]:
 
 def decompose_instance(family: str, params: Mapping[str, Any]) -> Dict[str, List[KernelSpec]]:
     """Kernels per algorithm for one census instance, rebuilt purely from
-    its (family, params) row — no jax, no re-measurement."""
+    its (family, params) row — no jax, no re-measurement. Memoized per
+    frozen (family, params)."""
     if family == "chain":
-        from repro.expressions.instances import random_instance
-
-        chain = random_instance(
+        chain_dims = _chain_instance_dims(
             int(params["n_matrices"]), int(params["lo"]), int(params["hi"]),
-            seed=int(params["seed"]),
+            int(params["seed"]),
         )
-        return decompose_chain_dims(chain.dims)
+        return decompose_chain_dims(chain_dims)
     return decompose_generalized(family, int(params["size"]))
+
+
+@lru_cache(maxsize=4096)
+def _chain_instance_dims(
+    n_matrices: int, lo: int, hi: int, seed: int
+) -> Tuple[int, ...]:
+    """The dims a chain instance row expands to (the instance generator is
+    a pure function of its arguments, so the mapping is cacheable)."""
+    from repro.expressions.instances import random_instance
+
+    return tuple(int(d) for d in random_instance(n_matrices, lo, hi, seed=seed).dims)
 
 
 def kernels_to_compact(kernels_by_alg: Mapping[str, Sequence[KernelSpec]]) -> Dict[str, List[List[Any]]]:

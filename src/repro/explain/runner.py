@@ -38,8 +38,10 @@ from repro.core.sweep import (
     instance_entry,
     merge_shards,
     run_chunked_campaign,
+    shard_counts,
     synthetic_instance_model,
 )
+from repro.core.types import DEFAULT_QUANTILE_RANGES, REPORT_QUANTILE_RANGE
 from repro.roofline.terms import MachineSpec, get_machine, synthetic_machine
 
 from .attribution import AlgorithmAttribution, attribute_algorithm
@@ -93,6 +95,15 @@ class ExplainSpec:
     flip_probes: int = 16
     flip_z: float = DEFAULT_FLIP_Z
     flip_min_prob: float = DEFAULT_FLIP_MIN_PROB
+    #: quantile ladder for the segment sessions. ``"report"`` (default)
+    #: runs one Procedure-2 sort per step — the report range only, which is
+    #: all the explainer consumes (segment *medians* + convergence); this
+    #: draws the exact same samples in the exact same order as the full
+    #: ladder (the hypothesis reorder comes from the report-range sort
+    #: either way), it just stops paying for the six extra ladder sorts
+    #: that only feed the census's rank-stability diagnostics. ``"paper"``
+    #: keeps the full 7-range ladder of the census.
+    ladder: str = "report"
     base_seed: int = 0
     fsync: bool = False
 
@@ -103,6 +114,14 @@ class ExplainSpec:
             raise ValueError("min_evidence must be in [0, 1]")
         if self.flip_probes < 1:
             raise ValueError("flip_probes must be >= 1")
+        if self.ladder not in ("report", "paper"):
+            raise ValueError('ladder must be "report" or "paper"')
+
+    def quantile_ranges(self) -> Tuple[Tuple[float, float], ...]:
+        """The session quantile ladder this campaign measures with."""
+        if self.ladder == "paper":
+            return tuple(DEFAULT_QUANTILE_RANGES)
+        return (REPORT_QUANTILE_RANGE,)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -139,11 +158,46 @@ def load_census(espec: ExplainSpec) -> Tuple[SweepSpec, List[Dict[str, Any]]]:
     return sweep_spec, merge_shards(sweep_spec, espec.census)
 
 
+#: census lines are canonical compact JSON (``sort_keys``, no spaces), so
+#: every anomaly line contains the first marker verbatim; the second
+#: tolerates hand-edited / pretty-printed stores.
+_ANOMALY_MARKERS = (b'"is_anomaly":true', b'"is_anomaly": true')
+
+
+def anomaly_records(sweep_spec: SweepSpec, root: str) -> List[Dict[str, Any]]:
+    """Anomalous census records, deduped by uid, in global grid order —
+    the result of ``[r for r in merge_shards(...) if r["is_anomaly"]]``
+    without json-parsing the overwhelmingly non-anomalous majority: lines
+    missing the ``is_anomaly: true`` substring are skipped unparsed, so
+    the scan cost tracks the anomaly count, not the census size."""
+    seen: Dict[str, Dict[str, Any]] = {}
+    for shard in range(sweep_spec.n_shards):
+        path = ShardStore(root, shard).records_path
+        try:
+            fh = open(path, "rb")
+        except OSError:
+            continue
+        with fh:
+            for line in fh:
+                if not line.endswith(b"\n"):
+                    break  # torn tail: an append in flight or a kill
+                if not any(m in line for m in _ANOMALY_MARKERS):
+                    continue
+                try:
+                    rec = json.loads(line.decode("utf-8"))
+                except (ValueError, UnicodeDecodeError):
+                    break  # corrupt line: stop, like ShardStore.open
+                if rec.get("is_anomaly"):
+                    seen.setdefault(str(rec["uid"]), rec)
+    return sorted(seen.values(), key=lambda r: r["index"])
+
+
 def explain_targets(espec: ExplainSpec) -> Tuple[SweepSpec, List[Dict[str, Any]]]:
     """(sweep spec, anomaly records in global grid order) — the campaign's
     deterministic work list. Non-anomalous records need no explanation."""
-    sweep_spec, records = load_census(espec)
-    return sweep_spec, [r for r in records if r.get("is_anomaly")]
+    spec_file = os.path.join(espec.census, "spec.json")
+    sweep_spec = SweepSpec.load(spec_file)
+    return sweep_spec, anomaly_records(sweep_spec, espec.census)
 
 
 def shard_targets(espec: ExplainSpec, targets: Sequence[Mapping[str, Any]],
@@ -369,6 +423,7 @@ def build_explain_session(
         m_per_iteration=espec.m_per_iteration,
         eps=espec.eps,
         max_measurements=espec.max_measurements,
+        quantile_ranges=espec.quantile_ranges(),
         shuffle_seed=shuffle_seed,
         meta={
             "uid": str(record["uid"]),
@@ -523,6 +578,7 @@ def run_explain_shard(
     max_steps: Optional[int] = None,
     progress: Optional[Callable[[str], None]] = None,
     census: Optional[Tuple[SweepSpec, List[Dict[str, Any]]]] = None,
+    heartbeat: Optional[Callable[..., None]] = None,
 ) -> ShardStore:
     """Run (or resume) one shard of the explanation campaign to completion.
 
@@ -536,7 +592,15 @@ def run_explain_shard(
 
     ``census`` is an optional preloaded :func:`explain_targets` result —
     workers driving several shards pass it so the census JSONLs are parsed
-    once per process, not once per shard.
+    once per process, not once per shard. ``heartbeat`` is the work-queue
+    lease hook (see :func:`repro.core.sweep.run_chunked_campaign`).
+
+    Wall-clock stage totals land in the shard's sidecar timings file under
+    explain-stage names: ``decompose_s`` (session build — kernel
+    decomposition + workload setup), ``measure_s`` (engine steps),
+    ``classify_s`` (attribution / classification in record_fn) and
+    ``append_s`` (store I/O) — the attribution substrate for explain
+    throughput regressions.
     """
     sweep_spec, targets = census if census is not None else explain_targets(espec)
     mine = shard_targets(espec, targets, shard)
@@ -547,6 +611,7 @@ def run_explain_shard(
         rebuild = lambda names: _wall_clock_explain_timers(
             espec, sweep_spec, records_by_uid, names
         )
+    timings: Dict[str, float] = {}
     run_chunked_campaign(
         store,
         list(records_by_uid),
@@ -558,7 +623,18 @@ def run_explain_shard(
         max_steps=max_steps,
         progress=progress,
         label=f"explain shard {shard}",
+        heartbeat=heartbeat,
+        timings=timings,
     )
+    if timings:
+        store.add_timings({
+            "decompose_s": timings.get("build_s", 0.0),
+            "measure_s": timings.get("step_s", 0.0),
+            "classify_s": timings.get("record_s", 0.0),
+            "append_s": timings.get("append_s", 0.0),
+            "steps": timings.get("steps", 0.0),
+            "records": timings.get("records", 0.0),
+        })
     return store
 
 
@@ -635,7 +711,9 @@ def explain_progress(
 ) -> Dict[str, Any]:
     """Explained / total anomalies per shard (the status line). ``targets``
     is an optional preloaded anomaly list — drivers that already parsed
-    the census skip a second parse."""
+    the census skip a second parse. Done counts are served from the slim
+    shard manifests (:func:`repro.core.sweep.shard_counts`) — a status
+    poll no longer re-parses every explanation JSONL."""
     if targets is None:
         _, targets = explain_targets(espec)
     per_shard = []
@@ -643,9 +721,7 @@ def explain_progress(
     for shard in range(espec.n_shards):
         n_total = len(shard_targets(espec, targets, shard))
         store = ShardStore(root, shard)
-        n_done = 0
-        if os.path.exists(store.records_path):
-            n_done = len(store.open(readonly=True).completed_uids())
+        n_done = shard_counts(store)["done"]
         per_shard.append({
             "shard": shard, "done": n_done, "total": n_total,
             "in_flight_chunk": os.path.exists(store.engine_path),

@@ -24,6 +24,10 @@ present only mid-chunk), ``merged.jsonl`` (after ``merge``).
 Resume semantics match the sweep: ``run`` is idempotent, and for the
 deterministic census backends (``cost_model``, ``simulated``) a SIGKILLed
 explain run resumes byte-identical to an uninterrupted one.
+
+Explanation campaigns are also drainable by many machines at once via the
+pull-based work queue (``python -m repro.launch.queue work --out DIR``) —
+see :mod:`repro.launch.queue`.
 """
 
 from __future__ import annotations
@@ -78,6 +82,12 @@ def add_campaign_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--flip-min-prob", type=float, default=0.25,
                    help="minimum probed flip probability before an "
                    "insignificant gap counts as not_reproducible")
+    g.add_argument("--ladder", default="report",
+                   choices=["report", "paper"],
+                   help="session quantile ladder: 'report' (default) runs "
+                   "one sort per step — all the explainer needs (medians + "
+                   "convergence, same samples in the same order); 'paper' "
+                   "keeps the census's full 7-range ladder")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--fsync", action="store_true")
 
@@ -116,6 +126,7 @@ def load_or_plan_spec(args: argparse.Namespace, *, announce: bool = True) -> Exp
         flip_probes=args.flip_probes,
         flip_z=args.flip_z,
         flip_min_prob=args.flip_min_prob,
+        ladder=args.ladder,
         base_seed=args.seed,
         fsync=args.fsync,
     )
@@ -140,7 +151,8 @@ def cmd_plan(args: argparse.Namespace) -> int:
         for fn in sorted(os.listdir(args.out)):
             if (fn.startswith("shard-") and
                     fn.split(".", 1)[-1] in ("jsonl", "manifest.json",
-                                             "engine.json")) \
+                                             "engine.json", "timings.json",
+                                             "lease.json")) \
                     or fn == "merged.jsonl":
                 os.remove(os.path.join(args.out, fn))
                 removed += 1

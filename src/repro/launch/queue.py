@@ -1,0 +1,358 @@
+"""Pull-based work queue — drain one campaign with any number of hosts.
+
+``launch/sweep.py run`` forks workers on ONE box and assigns shards
+statically. This launcher inverts that: the shared store directory IS the
+queue, and every participating host runs ``queue work`` against it,
+repeatedly leasing whichever shard is unfinished and unclaimed
+(:mod:`repro.core.lease`), driving it with the ordinary resumable shard
+runner, and releasing it. Nothing is assigned; hosts that join late, leave
+early, or die mid-chunk just shift which host resumes each shard — and for
+the deterministic backends the merged result is byte-identical to a 1-host
+run, because a lease takeover is literally the kill/resume path.
+
+    # host A (and B, C, ... — any count, any time, same shared dir)
+    PYTHONPATH=src python -m repro.launch.queue work --out /shared/census
+
+    # simulate N hosts locally (the CI byte-identity smoke)
+    PYTHONPATH=src python -m repro.launch.queue run --out DIR --hosts 2
+
+    # who holds what
+    PYTHONPATH=src python -m repro.launch.queue status --out DIR
+
+The queue serves both campaign kinds, auto-detected from the store root:
+``spec.json`` = a DiscriminantSweep census, ``espec.json`` = an
+AnomalyExplainer campaign. On-disk layout per shard (all under ``--out``):
+
+    shard-NNNN.jsonl           append-only records (source of truth)
+    shard-NNNN.manifest.json   slim counts + done flag
+    shard-NNNN.engine.json     in-flight chunk state (present mid-chunk)
+    shard-NNNN.lease.json      held by at most one live host
+    shard-NNNN.timings.json    advisory per-stage wall-clock totals
+
+Requirements on the shared filesystem: atomic ``O_EXCL`` create, atomic
+rename, and clocks agreeing to well within the lease TTL — POSIX-y NFS
+and every local filesystem qualify.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.lease import (
+    DEFAULT_HEARTBEAT_INTERVAL,
+    DEFAULT_TTL,
+    LeaseLost,
+    acquire_lease,
+    read_lease,
+)
+from repro.core.sweep import ShardStore, SweepSpec, shard_counts
+
+SWEEP_SPEC = "spec.json"
+EXPLAIN_SPEC = "espec.json"
+
+
+# ----------------------------------------------------------- the adapters ---
+
+
+class SweepQueue:
+    """A census store as a drainable queue."""
+
+    kind = "sweep"
+
+    def __init__(self, out: str) -> None:
+        self.out = out
+        self.spec = SweepSpec.load(os.path.join(out, SWEEP_SPEC))
+        self.n_shards = self.spec.n_shards
+
+    def shard_totals(self) -> List[int]:
+        totals = [0] * self.n_shards
+        for inst in self.spec.expand():
+            totals[self.spec.shard_of(inst)] += 1
+        return totals
+
+    def run_shard(self, shard: int, *, heartbeat, max_steps, progress) -> None:
+        from repro.core.sweep import run_shard
+
+        run_shard(
+            self.spec, self.out, shard,
+            max_steps=max_steps, progress=progress, heartbeat=heartbeat,
+        )
+
+    def merge(self) -> str:
+        from repro.core.sweep import write_merged
+
+        return write_merged(self.spec, self.out)
+
+    def progress(self) -> Dict[str, int]:
+        from repro.core.sweep import sweep_progress
+
+        prog = sweep_progress(self.spec, self.out)
+        return {"completed": prog["completed"], "total": prog["instances"]}
+
+
+class ExplainQueue:
+    """An explanation-campaign store as a drainable queue."""
+
+    kind = "explain"
+
+    def __init__(self, out: str) -> None:
+        from repro.explain.runner import ExplainSpec, explain_targets
+
+        self.out = out
+        self.espec = ExplainSpec.load(os.path.join(out, EXPLAIN_SPEC))
+        self.n_shards = self.espec.n_shards
+        #: (sweep spec, anomaly work list) — parsed once per host process
+        self.census = explain_targets(self.espec)
+
+    def shard_totals(self) -> List[int]:
+        from repro.explain.runner import shard_targets
+
+        _, targets = self.census
+        return [
+            len(shard_targets(self.espec, targets, s))
+            for s in range(self.n_shards)
+        ]
+
+    def run_shard(self, shard: int, *, heartbeat, max_steps, progress) -> None:
+        from repro.explain.runner import run_explain_shard
+
+        run_explain_shard(
+            self.espec, self.out, shard,
+            max_steps=max_steps, progress=progress,
+            census=self.census, heartbeat=heartbeat,
+        )
+
+    def merge(self) -> str:
+        from repro.explain.runner import write_merged_explained
+
+        return write_merged_explained(self.espec, self.out)
+
+    def progress(self) -> Dict[str, int]:
+        from repro.explain.runner import explain_progress
+
+        _, targets = self.census
+        prog = explain_progress(self.espec, self.out, targets=targets)
+        return {"completed": prog["completed"], "total": prog["anomalies"]}
+
+
+def open_queue(out: str):
+    """The store's adapter, auto-detected from which spec file it holds."""
+    if os.path.exists(os.path.join(out, SWEEP_SPEC)):
+        return SweepQueue(out)
+    if os.path.exists(os.path.join(out, EXPLAIN_SPEC)):
+        return ExplainQueue(out)
+    raise SystemExit(
+        f"{out} is neither a sweep store ({SWEEP_SPEC}) nor an explain "
+        f"store ({EXPLAIN_SPEC}) — plan a campaign there first"
+    )
+
+
+# ------------------------------------------------------------- the worker ---
+
+
+def _shard_done(out: str, shard: int) -> bool:
+    manifest = ShardStore(out, shard).read_manifest()
+    return bool(manifest and manifest.get("done"))
+
+
+def drain(
+    queue: Any,
+    owner: str,
+    *,
+    ttl: float = DEFAULT_TTL,
+    interval: float = DEFAULT_HEARTBEAT_INTERVAL,
+    poll: float = 1.0,
+    max_steps: Optional[int] = None,
+    say: Optional[Callable[[str], None]] = None,
+) -> bool:
+    """One host's pull loop: lease-an-unfinished-shard, run it, release,
+    repeat, until every shard's manifest says done. Dead hosts' shards are
+    adopted once their lease TTL expires (the acquire path breaks expired
+    leases); losing our own lease mid-shard (:class:`LeaseLost`) abandons
+    that shard without committing and moves on.
+
+    Returns True when the whole campaign is drained. With ``max_steps``
+    set, each shard is driven at most once and the loop exits after one
+    sweep over the shards (possibly leaving paused, resumable shards) —
+    the deadline/test entry point.
+    """
+    tell = say or (lambda msg: None)
+    n = queue.n_shards
+    # spread hosts across the ring so they don't all fight for shard 0
+    start = zlib.adler32(owner.encode("utf-8")) % max(1, n)
+    order = list(range(start, n)) + list(range(start))
+    single_pass = max_steps is not None
+    while True:
+        worked = False
+        all_done = True
+        for shard in order:
+            if _shard_done(queue.out, shard):
+                continue
+            all_done = False
+            lease = acquire_lease(
+                ShardStore(queue.out, shard).lease_path, owner,
+                ttl=ttl, interval=interval,
+            )
+            if lease is None:
+                continue  # a live host has it
+            tell(f"{owner}: leased shard {shard}")
+            try:
+                queue.run_shard(
+                    shard,
+                    heartbeat=lease.heartbeat,
+                    max_steps=max_steps,
+                    progress=tell,
+                )
+            except LeaseLost:
+                tell(f"{owner}: lost shard {shard} lease (taken over); "
+                     "moving on")
+                continue
+            lease.release()
+            worked = True
+        if all_done:
+            return True
+        if single_pass:
+            return False
+        if not worked:
+            # everything unfinished is leased elsewhere: wait for either a
+            # release (done) or a TTL expiry (dead host) to free a shard
+            time.sleep(poll)
+
+
+# ------------------------------------------------------------- subcommands ---
+
+
+def _owner(args: argparse.Namespace) -> str:
+    from repro.core.lease import default_owner
+
+    if args.host:
+        import uuid
+
+        return f"{args.host}:{os.getpid()}:{uuid.uuid4().hex[:8]}"
+    return default_owner()
+
+
+def cmd_work(args: argparse.Namespace) -> int:
+    queue = open_queue(args.out)
+    owner = _owner(args)
+    done = drain(
+        queue, owner,
+        ttl=args.ttl, interval=args.heartbeat, poll=args.poll,
+        max_steps=args.max_steps_per_shard,
+        say=lambda msg: print(f"# {msg}", flush=True),
+    )
+    prog = queue.progress()
+    print(f"# {owner}: {prog['completed']}/{prog['total']} complete "
+          f"({'drained' if done else 'paused'})")
+    return 0
+
+
+def cmd_run(args: argparse.Namespace) -> int:
+    """Simulate N hosts locally: N ``work`` subprocesses over one store."""
+    from repro.launch.sweep import _worker_env
+
+    queue = open_queue(args.out)
+    hosts = max(1, args.hosts)
+    procs: List[subprocess.Popen] = []
+    for h in range(hosts):
+        cmd = [
+            sys.executable, "-m", "repro.launch.queue", "work",
+            "--out", args.out, "--host", f"simhost-{h}",
+            "--ttl", str(args.ttl), "--heartbeat", str(args.heartbeat),
+            "--poll", str(args.poll),
+        ]
+        if args.max_steps_per_shard is not None:
+            cmd += ["--max-steps-per-shard", str(args.max_steps_per_shard)]
+        procs.append(subprocess.Popen(cmd, env=_worker_env()))
+    rcs = [p.wait() for p in procs]
+    failed = [(h, rc) for h, rc in enumerate(rcs) if rc != 0]
+    prog = queue.progress()
+    print(f"# {prog['completed']}/{prog['total']} complete "
+          f"({queue.kind}, {hosts} hosts)")
+    if failed:
+        for h, rc in failed:
+            print(f"# host {h} exited {rc}", file=sys.stderr)
+        print("# re-run the same command to resume", file=sys.stderr)
+        return 1
+    if prog["completed"] == prog["total"]:
+        print(f"# merged: {queue.merge()}")
+    return 0
+
+
+def cmd_status(args: argparse.Namespace) -> int:
+    queue = open_queue(args.out)
+    totals = queue.shard_totals()
+    prog = queue.progress()
+    print(f"# {queue.kind} queue {args.out}: "
+          f"{prog['completed']}/{prog['total']} complete")
+    now = time.time()
+    for shard in range(queue.n_shards):
+        store = ShardStore(queue.out, shard)
+        counts = shard_counts(store)
+        lease = read_lease(store.lease_path)
+        state = "done" if counts["done_flag"] else "open"
+        holder = ""
+        if lease is not None:
+            age = lease.age(now)
+            holder = (f" leased by {lease.owner} "
+                      f"(heartbeat {age:.0f}s ago"
+                      f"{', EXPIRED' if lease.expired(now) else ''})")
+        print(f"#   shard {shard:4d}: {counts['done']}/{totals[shard]} "
+              f"[{state}]{holder}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.queue",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def add_worker_args(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--out", required=True,
+                       help="shared store root (sweep or explain)")
+        p.add_argument("--ttl", type=float, default=DEFAULT_TTL,
+                       help="seconds without a heartbeat before a lease "
+                       "counts as dead and may be adopted")
+        p.add_argument("--heartbeat", type=float,
+                       default=DEFAULT_HEARTBEAT_INTERVAL,
+                       help="seconds between lease heartbeats (<< ttl)")
+        p.add_argument("--poll", type=float, default=1.0,
+                       help="seconds between queue polls when all "
+                       "unfinished shards are leased elsewhere")
+        p.add_argument("--max-steps-per-shard", type=int, default=None,
+                       help="pause each shard after N engine steps and make "
+                       "one pass only (resumable)")
+
+    p = sub.add_parser("work", help="pull worker: lease+run shards until "
+                       "the campaign is drained")
+    add_worker_args(p)
+    p.add_argument("--host", default="",
+                   help="host label for the lease owner token "
+                   "(default: the real hostname)")
+    p.set_defaults(fn=cmd_work)
+
+    p = sub.add_parser("run", help="simulate N hosts locally (N work "
+                       "subprocesses over one store)")
+    add_worker_args(p)
+    p.add_argument("--hosts", type=int, default=2)
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("status", help="per-shard progress + lease holders")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=cmd_status)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,11 @@ Resume semantics: ``run`` is idempotent — re-running after ANY interruption
 (including SIGKILL of the whole process group) continues from the last
 persisted chunk state and, for the deterministic backends (``cost_model``,
 ``simulated``), produces a census byte-identical to an uninterrupted run.
+
+To drain one census with MANY machines instead of many local workers,
+point any number of ``python -m repro.launch.queue work --out DIR``
+processes at the same (shared-filesystem) store — shards are leased
+dynamically rather than assigned (:mod:`repro.launch.queue`).
 """
 
 from __future__ import annotations
@@ -185,7 +190,8 @@ def cmd_plan(args: argparse.Namespace) -> int:
         for fn in sorted(os.listdir(args.out)):
             if (fn.startswith("shard-") and
                     fn.split(".", 1)[-1] in ("jsonl", "manifest.json",
-                                             "engine.json")) \
+                                             "engine.json", "timings.json",
+                                             "lease.json")) \
                     or fn == "merged.jsonl":
                 os.remove(os.path.join(args.out, fn))
                 removed += 1
