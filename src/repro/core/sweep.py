@@ -57,6 +57,7 @@ import json
 import math
 import os
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
@@ -64,7 +65,9 @@ import numpy as np
 
 from .discriminant import flops_discriminant_test
 from .engine import ExperimentEngine
+from .faults import FaultPlan, InjectedFault, active_plan
 from .measure import CostModelTimer, NoiseProfile, SimulatedTimer, Timer, WallClockTimer
+from .retry import STORE_IO_POLICY, with_retries
 from .scores import filter_candidates, initial_hypothesis_by_time
 from .session import MeasurementSession
 
@@ -562,8 +565,51 @@ def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[st
 # -------------------------------------------------------------- the store ---
 
 
+class StoreDamaged(RuntimeError):
+    """A shard store holds committed-but-unreadable data (mid-file
+    corruption, checksum mismatch). Raised instead of silently skipping
+    records: a census missing rows it *thinks* it has is worse than a
+    failed merge. Run ``fsck`` (``python -m repro.launch.fsck --out DIR``)
+    to classify, repair, and quarantine the damage, then re-drain."""
+
+
+def record_crc(record: Mapping[str, Any]) -> str:
+    """CRC32 (hex) of the record's canonical serialization, excluding the
+    ``_crc`` field itself — idempotent, so re-serializing a stored record
+    reproduces the same line bytes."""
+    body = {k: v for k, v in record.items() if k != "_crc"}
+    data = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return format(zlib.crc32(data.encode("utf-8")) & 0xFFFFFFFF, "08x")
+
+
 def _record_line(record: Mapping[str, Any]) -> str:
-    return json.dumps(record, sort_keys=True, separators=(",", ":")) + "\n"
+    rec = dict(record)
+    rec["_crc"] = record_crc(rec)
+    return json.dumps(rec, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+#: line classification statuses (shared with fsck)
+LINE_OK = "ok"                    #: parsed, CRC present and matching
+LINE_LEGACY = "legacy"            #: parsed, no ``_crc`` field (pre-CRC shard)
+LINE_UNDECODABLE = "undecodable"  #: not valid JSON / not UTF-8
+LINE_CRC_MISMATCH = "crc_mismatch"  #: parsed but fails its own checksum
+
+
+def parse_record_line(line: bytes) -> Tuple[Optional[Dict[str, Any]], str]:
+    """Decode one committed JSONL line into ``(record, status)``. Records
+    without ``_crc`` are tolerated (legacy shards); a present-but-wrong
+    ``_crc`` is damage even when the JSON parses."""
+    try:
+        rec = json.loads(line.decode("utf-8"))
+    except (ValueError, UnicodeDecodeError):
+        return None, LINE_UNDECODABLE
+    if not isinstance(rec, dict) or "uid" not in rec:
+        return None, LINE_UNDECODABLE
+    if "_crc" not in rec:
+        return rec, LINE_LEGACY
+    if rec["_crc"] != record_crc(rec):
+        return rec, LINE_CRC_MISMATCH
+    return rec, LINE_OK
 
 
 class ShardStore:
@@ -575,16 +621,28 @@ class ShardStore:
     (kill mid-append) and recomputes the manifest, so the completed set
     never contains a half-written record and never loses a whole one.
 
-    The manifest is *slim*: counts, committed byte length, and per-family
-    tallies — O(1) in shard size, so each append rewrites a few hundred
-    bytes instead of re-serializing every completed uid, and status polls
-    (:func:`shard_counts`) answer from it without parsing the JSONL.
+    The manifest is *slim*: counts, committed byte length, a rolling CRC32
+    of the committed bytes, and per-family tallies — O(1) in shard size,
+    so each append rewrites a few hundred bytes instead of re-serializing
+    every completed uid, and status polls (:func:`shard_counts`) answer
+    from it without parsing the JSONL.
+
+    Integrity contract: every record carries a ``_crc`` field (CRC32 of
+    its canonical serialization; absent on legacy shards and tolerated).
+    On open, a torn *trailing* line is truncated away as before, but a
+    damaged line in the middle of the file — bitrot, a foreign write, a
+    filesystem bug — is **damage**, not noise: a writer refuses to touch
+    the shard (:class:`StoreDamaged`, fsck repairs it) and a read-only
+    consumer counts the damaged lines in :attr:`damaged` so merge can
+    fail loudly instead of silently dropping records.
     """
 
-    def __init__(self, root: str, shard: int, fsync: bool = False) -> None:
+    def __init__(self, root: str, shard: int, fsync: bool = False,
+                 faults: Optional[FaultPlan] = None) -> None:
         self.root = root
         self.shard = shard
         self.fsync = fsync
+        self.faults = faults
         self.records_path = os.path.join(root, f"shard-{shard:04d}.jsonl")
         self.manifest_path = os.path.join(root, f"shard-{shard:04d}.manifest.json")
         self.engine_path = os.path.join(root, f"shard-{shard:04d}.engine.json")
@@ -594,6 +652,9 @@ class ShardStore:
         self._uids: set = set()
         self._by_family: Dict[str, Dict[str, int]] = {}
         self._records_bytes = 0
+        self._records_crc = 0
+        #: (line_no, status) of committed-but-unreadable lines (readonly)
+        self.damaged: List[Tuple[int, str]] = []
         self._opened = False
 
     # ---------------------------------------------------------- reading ---
@@ -606,30 +667,78 @@ class ShardStore:
         consumers (status / merge / report) may run concurrently with a
         live worker, and what looks like a torn tail to them may be that
         worker's append in flight — only the shard's owning worker, which
-        is single per shard, may rewrite the file."""
+        is single per shard, may rewrite the file. A damaged final line
+        that the manifest watermark already covers is NOT a torn tail —
+        it was a committed record (last-line bitrot) and is treated
+        exactly like mid-file damage.
+
+        Mid-file damage (an undecodable or checksum-failing line that is
+        NOT the final line) raises :class:`StoreDamaged` for a writer —
+        appending past silent damage would hide it behind fresh records —
+        and is skipped-but-counted (:attr:`damaged`) for read-only
+        consumers, so status can report it and merge can refuse."""
         if not readonly:
             os.makedirs(self.root, exist_ok=True)
         self._records = []
         self._uids = set()
         self._by_family = {}
         self._records_bytes = 0
+        self._records_crc = 0
+        self.damaged = []
         if os.path.exists(self.records_path):
             with open(self.records_path, "rb") as fh:
                 data = fh.read()
+            lines = data.splitlines(keepends=True)
+            # a damaged FINAL line is a torn (uncommitted, droppable) tail
+            # only when it lies past the manifest's byte watermark; one the
+            # manifest already committed is last-line bitrot — real damage.
+            # Safe under a concurrent writer: its in-flight append is by
+            # definition past the watermark (manifest commits afterwards).
+            manifest = self.read_manifest()
+            try:
+                watermark = int((manifest or {}).get("records_bytes", 0))
+            except (TypeError, ValueError):
+                watermark = 0
+            pos = 0
             good_end = 0
-            for line in data.splitlines(keepends=True):
+            contiguous = True  # no damage seen yet: prefix is truncat-able
+            for i, line in enumerate(lines):
+                pos += len(line)
+                last = i == len(lines) - 1
+                committed = pos <= watermark
                 if not line.endswith(b"\n"):
+                    if committed:
+                        if not readonly:
+                            raise StoreDamaged(
+                                f"{self.records_path}: line {i + 1} lost "
+                                "its terminator inside the committed "
+                                "region (last-line bitrot) — run fsck "
+                                "before writing to this shard"
+                            )
+                        self.damaged.append((i + 1, LINE_UNDECODABLE))
+                        contiguous = False
                     break  # torn tail: the batch never committed
-                try:
-                    rec = json.loads(line.decode("utf-8"))
-                except (ValueError, UnicodeDecodeError):
-                    break  # corrupt line: drop it and everything after
+                rec, status = parse_record_line(line)
+                if status in (LINE_UNDECODABLE, LINE_CRC_MISMATCH):
+                    if last and not committed:
+                        break  # a torn tail that happens to end in \n
+                    if not readonly:
+                        raise StoreDamaged(
+                            f"{self.records_path}: line {i + 1} is "
+                            f"{status} mid-file — run fsck before writing "
+                            "to this shard"
+                        )
+                    self.damaged.append((i + 1, status))
+                    contiguous = False
+                    continue
                 self._records.append(rec)
                 self._uids.add(rec["uid"])
                 self._tally(rec)
-                good_end += len(line)
+                self._records_crc = zlib.crc32(line, self._records_crc)
+                if contiguous:
+                    good_end += len(line)
             self._records_bytes = good_end
-            if good_end < len(data) and not readonly:
+            if good_end < len(data) and not readonly and not self.damaged:
                 with open(self.records_path, "r+b") as fh:
                     fh.truncate(good_end)
         self._opened = True
@@ -661,23 +770,69 @@ class ShardStore:
     def append_records(self, records: Sequence[Mapping[str, Any]]) -> int:
         """Append a batch (skipping already-present uids) as ONE serialized
         write, fsync if configured, refresh the slim manifest. Returns the
-        number actually appended."""
+        number actually appended.
+
+        Transient ``OSError`` is retried with bounded backoff; before each
+        (re)try the file is truncated back to the committed watermark, so
+        a half-written first attempt can never leave garbage in front of
+        the retried batch."""
         self._ensure_open()
         fresh = [dict(r) for r in records if r["uid"] not in self._uids]
         if fresh:
-            data = "".join(_record_line(r) for r in fresh)
-            with open(self.records_path, "a", encoding="utf-8") as fh:
-                fh.write(data)
-                fh.flush()
-                if self.fsync:
-                    os.fsync(fh.fileno())
+            data = "".join(_record_line(r) for r in fresh).encode("utf-8")
+            with_retries(
+                lambda: self._commit_batch(data),
+                policy=STORE_IO_POLICY,
+                seed=f"append:{self.records_path}",
+                describe=f"append to {self.records_path}",
+            )
             self._records.extend(fresh)
             for r in fresh:
                 self._uids.add(r["uid"])
                 self._tally(r)
-            self._records_bytes += len(data.encode("utf-8"))
+            self._records_bytes += len(data)
+            self._records_crc = zlib.crc32(data, self._records_crc)
         self.write_manifest()
         return len(fresh)
+
+    def _commit_batch(self, data: bytes) -> None:
+        """One append attempt: truncate away any previous failed attempt,
+        write the whole batch, flush (fsync if configured). Fault-injection
+        sites ``store.append`` (torn_write / corrupt_byte / io_error) and
+        ``store.fsync`` (drop_fsync) live here."""
+        specs = self.faults.poke("store.append") if self.faults else []
+        with open(self.records_path, "ab") as fh:
+            if fh.tell() > self._records_bytes:
+                fh.truncate(self._records_bytes)
+            for spec in specs:
+                if spec.op == "torn_write" and self.faults.claim(spec):
+                    cut = max(1, min(len(data) - 1,
+                                     int(len(data) * (spec.arg or 0.5))))
+                    fh.write(data[:cut])
+                    fh.flush()
+                    raise InjectedFault(
+                        f"torn append after {cut}/{len(data)} bytes "
+                        f"({spec.id})"
+                    )
+            fh.write(data)
+            fh.flush()
+            if self.fsync:
+                dropped = self.faults.poke("store.fsync") if self.faults else []
+                if not any(s.op == "drop_fsync" and self.faults.claim(s)
+                           for s in dropped):
+                    os.fsync(fh.fileno())
+        # bitrot simulation: flip one byte of an EARLIER, committed record
+        # (only after something is committed — stays armed until then)
+        for spec in specs:
+            if (spec.op == "corrupt_byte" and self._records_bytes > 0
+                    and self.faults.claim(spec)):
+                offset = self.faults.rng(spec).randrange(self._records_bytes)
+                with open(self.records_path, "r+b") as fh:
+                    fh.seek(offset)
+                    if fh.read(1) == b"\n":
+                        offset = max(0, offset - 1)
+                    fh.seek(offset)
+                    fh.write(b"\x00")
 
     def write_manifest(self, done: Optional[bool] = None) -> None:
         self._ensure_open()
@@ -685,17 +840,27 @@ class ShardStore:
             "shard": self.shard,
             "n_completed": len(self._records),
             "records_bytes": self._records_bytes,
+            "records_crc32": format(self._records_crc & 0xFFFFFFFF, "08x"),
             "by_family": self._by_family,
         }
         if done is not None:
             manifest["done"] = bool(done)
-        tmp = self.manifest_path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(manifest, fh, indent=1, sort_keys=True)
-            fh.flush()
-            if self.fsync:
-                os.fsync(fh.fileno())
-        os.replace(tmp, self.manifest_path)
+
+        def commit() -> None:
+            tmp = self.manifest_path + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(manifest, fh, indent=1, sort_keys=True)
+                fh.flush()
+                if self.fsync:
+                    os.fsync(fh.fileno())
+            os.replace(tmp, self.manifest_path)
+
+        with_retries(
+            commit,
+            policy=STORE_IO_POLICY,
+            seed=f"manifest:{self.manifest_path}",
+            describe=f"manifest rewrite {self.manifest_path}",
+        )
 
     def read_manifest(self) -> Optional[Dict[str, Any]]:
         """The on-disk manifest (no open() needed), or None."""
@@ -761,14 +926,18 @@ def shard_counts(store: ShardStore) -> Dict[str, Any]:
             legacy = True  # file shrank: manifest is stale, rescan
     if legacy:
         n_done = 0
+        n_damaged = 0
         by_family: Dict[str, Dict[str, int]] = {}
         done_flag = bool(manifest.get("done")) if manifest else False
         if os.path.exists(store.records_path):
             scan = ShardStore(store.root, store.shard).open(readonly=True)
             n_done = len(scan._records)
+            n_damaged = len(scan.damaged)
             by_family = scan._by_family
-        return {"done": n_done, "by_family": by_family, "done_flag": done_flag}
+        return {"done": n_done, "by_family": by_family,
+                "done_flag": done_flag, "damaged": n_damaged}
     n_done = int(manifest["n_completed"])
+    n_damaged = 0
     by_family = {
         f: {"done": int(c.get("done", 0)), "anomalies": int(c.get("anomalies", 0))}
         for f, c in manifest["by_family"].items()
@@ -777,13 +946,16 @@ def shard_counts(store: ShardStore) -> Dict[str, Any]:
         with open(store.records_path, "rb") as fh:
             fh.seek(base)
             tail = fh.read()
-        for line in tail.splitlines(keepends=True):
+        lines = tail.splitlines(keepends=True)
+        for i, line in enumerate(lines):
             if not line.endswith(b"\n"):
                 break
-            try:
-                rec = json.loads(line.decode("utf-8"))
-            except (ValueError, UnicodeDecodeError):
-                break
+            rec, status = parse_record_line(line)
+            if status in (LINE_UNDECODABLE, LINE_CRC_MISMATCH):
+                if i == len(lines) - 1:
+                    break  # an append in flight; not yet damage
+                n_damaged += 1
+                continue
             n_done += 1
             fam = by_family.setdefault(
                 str(rec.get("family", "?")), {"done": 0, "anomalies": 0}
@@ -795,6 +967,7 @@ def shard_counts(store: ShardStore) -> Dict[str, Any]:
         "done": n_done,
         "by_family": by_family,
         "done_flag": bool(manifest.get("done", False)),
+        "damaged": n_damaged,
     }
 
 
@@ -829,6 +1002,7 @@ def run_chunked_campaign(
     label: str = "shard",
     heartbeat: Optional[Callable[..., None]] = None,
     timings: Optional[Dict[str, float]] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> bool:
     """The shared chunk/resume/save/append driver behind every sharded
     campaign (census shards AND anomaly explanations — one copy of the
@@ -859,6 +1033,10 @@ def run_chunked_campaign(
     (record_fn — discriminant / classification), ``append_s`` (store I/O),
     plus ``steps`` / ``records`` counts. Pure observability — nothing here
     feeds back into measurements or records.
+
+    ``faults`` is the chaos hook: the ``campaign.step`` injection site is
+    poked once per engine step (sigkill / stall ops — see
+    :mod:`repro.core.faults`).
     """
     say = progress or (lambda msg: None)
     beat = heartbeat or (lambda *a: None)
@@ -871,12 +1049,23 @@ def run_chunked_campaign(
     while True:
         engine: Optional[ExperimentEngine] = None
         if store.has_engine_state():
-            timers = None
-            if rebuild_timers is not None:
+            try:
                 with open(store.engine_path) as fh:
-                    names = [s["name"] for s in json.load(fh)["sessions"]]
-                timers = rebuild_timers(names)
-            engine = ExperimentEngine.load(store.engine_path, timers=timers)
+                    state = json.load(fh)
+                timers = None
+                if rebuild_timers is not None:
+                    names = [s["name"] for s in state["sessions"]]
+                    timers = rebuild_timers(names)
+                engine = ExperimentEngine.load(store.engine_path, timers=timers)
+            except (ValueError, KeyError, TypeError):
+                # corrupt in-flight state (bitrot; engine.save is atomic so
+                # a kill can't cause this): rebuilding the chunk from the
+                # todo list replays it bit-identically for the
+                # deterministic backends — drop the state, warn, rebuild
+                say(f"{label}: corrupt engine state discarded (chunk will "
+                    "be re-run deterministically)")
+                store.clear_engine_state()
+                continue
             chunk_uids = engine.session_names
             if all(uid in completed for uid in chunk_uids):
                 # killed between record append and state cleanup
@@ -904,6 +1093,8 @@ def run_chunked_campaign(
                 engine.save(store.engine_path)
                 say(f"{label}: paused (step budget)")
                 return False
+            if faults is not None:
+                faults.poke("campaign.step")
             beat()
             t0 = time.perf_counter()
             stepped = engine.step()
@@ -943,15 +1134,19 @@ def run_shard(
     max_steps: Optional[int] = None,
     progress: Optional[Callable[[str], None]] = None,
     heartbeat: Optional[Callable[..., None]] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> ShardStore:
     """Run (or resume) one shard of the census to completion — the census
     instantiation of :func:`run_chunked_campaign` (see there for the
     persistence/resume contract). ``max_steps`` bounds the engine steps
     this call takes (the shard is left resumable mid-chunk) — used by
     tests and deadline-driven callers. ``heartbeat`` is the work-queue
-    lease hook (see :func:`run_chunked_campaign`).
+    lease hook (see :func:`run_chunked_campaign`). ``faults`` defaults to
+    the environment's chaos plan (:func:`repro.core.faults.active_plan`).
     """
-    store = ShardStore(root, shard, fsync=spec.fsync).open()
+    if faults is None:
+        faults = active_plan()
+    store = ShardStore(root, shard, fsync=spec.fsync, faults=faults).open()
     instances = {i.uid: i for i in spec.shard_instances(shard)}
     rebuild = None
     if spec.backend == "wall_clock":
@@ -971,6 +1166,7 @@ def run_shard(
         label=f"shard {shard}",
         heartbeat=heartbeat,
         timings=timings,
+        faults=faults,
     )
     if timings:
         store.add_timings(timings)
@@ -980,13 +1176,40 @@ def run_shard(
 # ------------------------------------------------------------ merge/triage ---
 
 
-def merge_shards(spec: SweepSpec, root: str) -> List[Dict[str, Any]]:
-    """All shard records, deduped by uid, in global grid order."""
+def scan_damage(n_shards: int, root: str) -> Dict[int, List[Tuple[int, str]]]:
+    """Committed-but-unreadable lines per shard: ``{shard: [(line_no,
+    status), ...]}`` for shards with damage. The authoritative full check
+    behind merge's refusal and the status damage counts."""
+    found: Dict[int, List[Tuple[int, str]]] = {}
+    for shard in range(n_shards):
+        store = ShardStore(root, shard).open(readonly=True)
+        if store.damaged:
+            found[shard] = list(store.damaged)
+    return found
+
+
+def merge_shards(spec: SweepSpec, root: str, *, strict: bool = True) -> List[Dict[str, Any]]:
+    """All shard records, deduped by uid, in global grid order.
+
+    ``strict`` (the default) refuses to merge a store containing mid-file
+    damage: silently skipping undecodable lines would publish a census
+    that is missing rows it was told it has. Run fsck, then merge."""
     seen: Dict[str, Dict[str, Any]] = {}
+    damaged: Dict[int, int] = {}
     for shard in range(spec.n_shards):
         store = ShardStore(root, shard).open(readonly=True)
+        if store.damaged:
+            damaged[shard] = len(store.damaged)
         for r in store.records:
             seen.setdefault(r["uid"], r)
+    if damaged and strict:
+        detail = ", ".join(f"shard {s}: {n} line(s)"
+                           for s, n in sorted(damaged.items()))
+        raise StoreDamaged(
+            f"{root} holds {sum(damaged.values())} damaged record line(s) "
+            f"({detail}) — refusing to merge past silent data loss; run "
+            f"`python -m repro.launch.fsck --out {root}` first"
+        )
     return sorted(seen.values(), key=lambda r: r["index"])
 
 
@@ -1075,6 +1298,7 @@ def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
     per_shard = []
     total_done = 0
     anomalies = 0
+    total_damaged = 0
     per_family: Dict[str, Dict[str, int]] = {}
     for shard in range(spec.n_shards):
         store = ShardStore(root, shard)
@@ -1091,14 +1315,17 @@ def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
         per_shard.append({
             "shard": shard, "done": counts["done"], "total": totals[shard],
             "anomalies": shard_anom, "in_flight_chunk": in_flight,
+            "damaged": counts.get("damaged", 0),
         })
         total_done += counts["done"]
         anomalies += shard_anom
+        total_damaged += counts.get("damaged", 0)
     return {
         "name": spec.name,
         "instances": len(instances),
         "completed": total_done,
         "anomalies": anomalies,
+        "damaged": total_damaged,
         "by_family": per_family,
         "shards": per_shard,
     }

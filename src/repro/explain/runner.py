@@ -29,14 +29,19 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultPlan, active_plan
 from repro.core.measure import CostModelTimer, NoiseProfile, SimulatedTimer, Timer, WallClockTimer
 from repro.core.session import MeasurementSession
 from repro.core.sweep import (
+    LINE_CRC_MISMATCH,
+    LINE_UNDECODABLE,
     InstanceSpec,
     ShardStore,
+    StoreDamaged,
     SweepSpec,
     instance_entry,
     merge_shards,
+    parse_record_line,
     run_chunked_campaign,
     shard_counts,
     synthetic_instance_model,
@@ -178,17 +183,23 @@ def anomaly_records(sweep_spec: SweepSpec, root: str) -> List[Dict[str, Any]]:
         except OSError:
             continue
         with fh:
-            for line in fh:
-                if not line.endswith(b"\n"):
-                    break  # torn tail: an append in flight or a kill
-                if not any(m in line for m in _ANOMALY_MARKERS):
-                    continue
-                try:
-                    rec = json.loads(line.decode("utf-8"))
-                except (ValueError, UnicodeDecodeError):
-                    break  # corrupt line: stop, like ShardStore.open
-                if rec.get("is_anomaly"):
-                    seen.setdefault(str(rec["uid"]), rec)
+            lines = fh.read().splitlines(keepends=True)
+        for i, line in enumerate(lines):
+            if not line.endswith(b"\n"):
+                break  # torn tail: an append in flight or a kill
+            if not any(m in line for m in _ANOMALY_MARKERS):
+                continue
+            rec, status = parse_record_line(line)
+            if status in (LINE_UNDECODABLE, LINE_CRC_MISMATCH):
+                if i == len(lines) - 1:
+                    break  # a torn tail that happens to end in \n
+                raise StoreDamaged(
+                    f"{path}: line {i + 1} is {status} mid-file — the "
+                    "census this campaign feeds on is damaged; run "
+                    f"`python -m repro.launch.fsck --out {root}` first"
+                )
+            if rec.get("is_anomaly"):
+                seen.setdefault(str(rec["uid"]), rec)
     return sorted(seen.values(), key=lambda r: r["index"])
 
 
@@ -579,6 +590,7 @@ def run_explain_shard(
     progress: Optional[Callable[[str], None]] = None,
     census: Optional[Tuple[SweepSpec, List[Dict[str, Any]]]] = None,
     heartbeat: Optional[Callable[..., None]] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> ShardStore:
     """Run (or resume) one shard of the explanation campaign to completion.
 
@@ -602,10 +614,12 @@ def run_explain_shard(
     ``append_s`` (store I/O) — the attribution substrate for explain
     throughput regressions.
     """
+    if faults is None:
+        faults = active_plan()
     sweep_spec, targets = census if census is not None else explain_targets(espec)
     mine = shard_targets(espec, targets, shard)
     records_by_uid = {str(r["uid"]): r for r in mine}
-    store = ShardStore(root, shard, fsync=espec.fsync).open()
+    store = ShardStore(root, shard, fsync=espec.fsync, faults=faults).open()
     rebuild = None
     if sweep_spec.backend == "wall_clock":
         rebuild = lambda names: _wall_clock_explain_timers(
@@ -625,6 +639,7 @@ def run_explain_shard(
         label=f"explain shard {shard}",
         heartbeat=heartbeat,
         timings=timings,
+        faults=faults,
     )
     if timings:
         store.add_timings({
@@ -641,13 +656,28 @@ def run_explain_shard(
 # ------------------------------------------------------------ merge/triage ---
 
 
-def merge_explained(espec: ExplainSpec, root: str) -> List[Dict[str, Any]]:
-    """All shard explanation records, deduped by uid, in census grid order."""
+def merge_explained(espec: ExplainSpec, root: str,
+                    *, strict: bool = True) -> List[Dict[str, Any]]:
+    """All shard explanation records, deduped by uid, in census grid order.
+
+    ``strict`` (the default) refuses to merge past mid-file damage, like
+    :func:`repro.core.sweep.merge_shards` — run fsck, then merge."""
     seen: Dict[str, Dict[str, Any]] = {}
+    damaged: Dict[int, int] = {}
     for shard in range(espec.n_shards):
         store = ShardStore(root, shard).open(readonly=True)
+        if store.damaged:
+            damaged[shard] = len(store.damaged)
         for r in store.records:
             seen.setdefault(r["uid"], r)
+    if damaged and strict:
+        detail = ", ".join(f"shard {s}: {n} line(s)"
+                           for s, n in sorted(damaged.items()))
+        raise StoreDamaged(
+            f"{root} holds {sum(damaged.values())} damaged record line(s) "
+            f"({detail}) — refusing to merge past silent data loss; run "
+            f"`python -m repro.launch.fsck --out {root}` first"
+        )
     return sorted(seen.values(), key=lambda r: r["index"])
 
 
@@ -718,18 +748,22 @@ def explain_progress(
         _, targets = explain_targets(espec)
     per_shard = []
     total_done = 0
+    total_damaged = 0
     for shard in range(espec.n_shards):
         n_total = len(shard_targets(espec, targets, shard))
         store = ShardStore(root, shard)
-        n_done = shard_counts(store)["done"]
+        counts = shard_counts(store)
         per_shard.append({
-            "shard": shard, "done": n_done, "total": n_total,
+            "shard": shard, "done": counts["done"], "total": n_total,
             "in_flight_chunk": os.path.exists(store.engine_path),
+            "damaged": counts.get("damaged", 0),
         })
-        total_done += n_done
+        total_done += counts["done"]
+        total_damaged += counts.get("damaged", 0)
     return {
         "name": espec.name,
         "anomalies": len(targets),
         "completed": total_done,
+        "damaged": total_damaged,
         "shards": per_shard,
     }

@@ -39,6 +39,7 @@ import subprocess
 import sys
 from typing import List, Optional
 
+from repro.core.sweep import StoreDamaged
 from repro.explain.runner import (
     SPEC_FILE,
     ExplainSpec,
@@ -156,6 +157,13 @@ def cmd_plan(args: argparse.Namespace) -> int:
                     or fn == "merged.jsonl":
                 os.remove(os.path.join(args.out, fn))
                 removed += 1
+        qdir = os.path.join(args.out, "quarantine")
+        if os.path.isdir(qdir):
+            # quarantined damage belongs to the old plan's records
+            import shutil
+
+            shutil.rmtree(qdir)
+            removed += 1
         if removed:
             print(f"# --force: removed {removed} stale shard/merge artifacts")
     espec = load_or_plan_spec(args)
@@ -206,7 +214,11 @@ def cmd_run(args: argparse.Namespace) -> int:
         print("# re-run the same command to resume", file=sys.stderr)
         return 1
     if prog["completed"] == prog["anomalies"]:
-        path = write_merged_explained(espec, args.out)
+        try:
+            path = write_merged_explained(espec, args.out)
+        except StoreDamaged as err:
+            print(f"# merge refused: {err}", file=sys.stderr)
+            return 1
         print(f"# merged explanations: {path}")
     return 0
 
@@ -234,16 +246,31 @@ def cmd_status(args: argparse.Namespace) -> int:
           f"anomalies explained")
     for row in prog["shards"]:
         flag = " (chunk in flight)" if row["in_flight_chunk"] else ""
-        print(f"#   shard {row['shard']:4d}: {row['done']}/{row['total']}{flag}")
+        damage = f" DAMAGED x{row['damaged']}" if row.get("damaged") else ""
+        print(f"#   shard {row['shard']:4d}: {row['done']}/{row['total']}"
+              f"{flag}{damage}")
+    if prog.get("damaged"):
+        print(f"# {prog['damaged']} damaged record line(s) — merge will "
+              f"refuse; run: python -m repro.launch.fsck --out {args.out}")
     return 0
 
 
 def cmd_merge(args: argparse.Namespace) -> int:
     espec = ExplainSpec.load(spec_path(args.out))
-    path = write_merged_explained(espec, args.out)
+    try:
+        path = write_merged_explained(espec, args.out)
+    except StoreDamaged as err:
+        print(f"# merge refused: {err}", file=sys.stderr)
+        return 1
     n = sum(1 for _ in open(path))
     print(f"# merged {n} explanations -> {path}")
     return 0
+
+
+def cmd_fsck(args: argparse.Namespace) -> int:
+    from repro.launch.fsck import run_fsck
+
+    return run_fsck(args.out, dry_run=args.dry_run)
 
 
 def cmd_calibrate(args: argparse.Namespace) -> int:
@@ -349,6 +376,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = sub.add_parser("merge", help="merge shard JSONLs into merged.jsonl")
     p.add_argument("--out", required=True)
     p.set_defaults(fn=cmd_merge)
+
+    p = sub.add_parser("fsck", help="classify/repair/quarantine store damage")
+    p.add_argument("--out", required=True)
+    p.add_argument("--dry-run", action="store_true",
+                   help="report damage without changing anything")
+    p.set_defaults(fn=cmd_fsck)
 
     p = sub.add_parser(
         "calibrate",

@@ -47,11 +47,12 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.lease import (
     DEFAULT_HEARTBEAT_INTERVAL,
     DEFAULT_TTL,
+    LEASE_CORRUPT,
     LeaseLost,
-    acquire_lease,
-    read_lease,
+    acquire_lease_with_backoff,
+    read_lease_ex,
 )
-from repro.core.sweep import ShardStore, SweepSpec, shard_counts
+from repro.core.sweep import ShardStore, StoreDamaged, SweepSpec, shard_counts
 
 SWEEP_SPEC = "spec.json"
 EXPLAIN_SPEC = "espec.json"
@@ -181,6 +182,14 @@ def drain(
     set, each shard is driven at most once and the loop exits after one
     sweep over the shards (possibly leaving paused, resumable shards) —
     the deadline/test entry point.
+
+    Degradation: a shard whose store turns out to be damaged
+    (:class:`StoreDamaged` — mid-file corruption that only fsck may
+    repair) is released and remembered, never retried by this host; when
+    every unfinished shard is damaged the drain returns False instead of
+    spinning, and the operator runs fsck. Lease acquisition uses bounded
+    jittered backoff, so transient IO errors and thundering-herd
+    contention degrade to a later pass rather than a crash.
     """
     tell = say or (lambda msg: None)
     n = queue.n_shards
@@ -188,6 +197,7 @@ def drain(
     start = zlib.adler32(owner.encode("utf-8")) % max(1, n)
     order = list(range(start, n)) + list(range(start))
     single_pass = max_steps is not None
+    damaged: set = set()
     while True:
         worked = False
         all_done = True
@@ -195,12 +205,14 @@ def drain(
             if _shard_done(queue.out, shard):
                 continue
             all_done = False
-            lease = acquire_lease(
+            if shard in damaged:
+                continue
+            lease = acquire_lease_with_backoff(
                 ShardStore(queue.out, shard).lease_path, owner,
                 ttl=ttl, interval=interval,
             )
             if lease is None:
-                continue  # a live host has it
+                continue  # a live host has it (or IO kept failing)
             tell(f"{owner}: leased shard {shard}")
             try:
                 queue.run_shard(
@@ -213,10 +225,22 @@ def drain(
                 tell(f"{owner}: lost shard {shard} lease (taken over); "
                      "moving on")
                 continue
+            except StoreDamaged as err:
+                damaged.add(shard)
+                lease.release()
+                tell(f"{owner}: shard {shard} store is damaged ({err}); "
+                     "re-enqueued for after fsck, moving on")
+                continue
             lease.release()
             worked = True
         if all_done:
             return True
+        pending = [s for s in order
+                   if s not in damaged and not _shard_done(queue.out, s)]
+        if damaged and not pending:
+            tell(f"{owner}: every unfinished shard is damaged "
+                 f"({sorted(damaged)}) — run fsck, then drain again")
+            return False
         if single_pass:
             return False
         if not worked:
@@ -281,7 +305,11 @@ def cmd_run(args: argparse.Namespace) -> int:
         print("# re-run the same command to resume", file=sys.stderr)
         return 1
     if prog["completed"] == prog["total"]:
-        print(f"# merged: {queue.merge()}")
+        try:
+            print(f"# merged: {queue.merge()}")
+        except StoreDamaged as err:
+            print(f"# merge refused: {err}", file=sys.stderr)
+            return 1
     return 0
 
 
@@ -292,20 +320,36 @@ def cmd_status(args: argparse.Namespace) -> int:
     print(f"# {queue.kind} queue {args.out}: "
           f"{prog['completed']}/{prog['total']} complete")
     now = time.time()
+    total_damaged = 0
     for shard in range(queue.n_shards):
         store = ShardStore(queue.out, shard)
         counts = shard_counts(store)
-        lease = read_lease(store.lease_path)
+        lease, lease_state = read_lease_ex(store.lease_path)
         state = "done" if counts["done_flag"] else "open"
         holder = ""
-        if lease is not None:
+        if lease_state == LEASE_CORRUPT:
+            holder = " lease CORRUPT (fsck will clear it)"
+        elif lease is not None:
             age = lease.age(now)
             holder = (f" leased by {lease.owner} "
                       f"(heartbeat {age:.0f}s ago"
                       f"{', EXPIRED' if lease.expired(now) else ''})")
+        damage = ""
+        if counts.get("damaged"):
+            total_damaged += counts["damaged"]
+            damage = f" DAMAGED x{counts['damaged']}"
         print(f"#   shard {shard:4d}: {counts['done']}/{totals[shard]} "
-              f"[{state}]{holder}")
+              f"[{state}]{holder}{damage}")
+    if total_damaged:
+        print(f"# {total_damaged} damaged record line(s) — merge will "
+              f"refuse; run: python -m repro.launch.fsck --out {args.out}")
     return 0
+
+
+def cmd_fsck(args: argparse.Namespace) -> int:
+    from repro.launch.fsck import run_fsck
+
+    return run_fsck(args.out, dry_run=args.dry_run)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -349,6 +393,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = sub.add_parser("status", help="per-shard progress + lease holders")
     p.add_argument("--out", required=True)
     p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("fsck", help="classify/repair/quarantine store damage")
+    p.add_argument("--out", required=True)
+    p.add_argument("--dry-run", action="store_true",
+                   help="report damage without changing anything")
+    p.set_defaults(fn=cmd_fsck)
 
     args = ap.parse_args(argv)
     return args.fn(args)
