@@ -32,6 +32,7 @@ Modules:
   roofline     — §Roofline table from the dry-run reports
   sweep        — DiscriminantSweep census throughput, 1 vs N workers
   explain      — AnomalyExplainer throughput, 1 vs N workers
+  kernels      — kernel_variants wall-clock census + per-site variant times
 """
 
 from __future__ import annotations
@@ -45,6 +46,7 @@ from typing import Any, Dict, List
 
 from . import (
     bench_explain,
+    bench_kernels,
     bench_large_chain,
     bench_paper_tables,
     bench_rank_scaling,
@@ -64,6 +66,7 @@ MODULES = {
     "roofline": bench_roofline.run,
     "sweep": bench_sweep.run,
     "explain": bench_explain.run,
+    "kernels": bench_kernels.run,
 }
 
 

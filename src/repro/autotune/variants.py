@@ -208,7 +208,9 @@ def matmul_blocks_site(
     dtype=jnp.float32,
     interpret: bool = True,
 ) -> VariantSite:
-    from repro.kernels import matmul
+    # from the defining module: the package-level name can be shadowed by
+    # the like-named subpackage after a dotted import (see repro.kernels)
+    from repro.kernels.matmul.ops import matmul
 
     def inputs(seed: int):
         ks = jax.random.split(jax.random.PRNGKey(seed), 2)

@@ -20,6 +20,7 @@ All timers return seconds.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
@@ -188,6 +189,17 @@ class WallClockTimer(Timer):
     stopping the clock: when that post-call block costs as much as the
     timed call itself, the workload is not blocking and the timer refuses
     to measure it (loudly, with the offending name).
+
+    Minimum-measurable-time guard: a workload whose single call completes
+    in less than ``min_time_s`` (default :data:`MIN_MEASURABLE_S`) would
+    measure mostly clock granularity and Python dispatch, not the
+    algorithm — exactly the regime of small-shape kernel segments. Each
+    workload is calibrated on its first measurement: if one call is under
+    the floor, subsequent samples time an inner loop of ``r`` calls and
+    report the mean per-call time, with ``r`` chosen so the timed region
+    clears the floor (capped at :data:`MAX_INNER_REPEATS`). The chosen
+    counts are surfaced via :attr:`inner_repeats` so records can carry
+    them. ``min_time_s=0`` disables the guard (every ``r`` is 1).
     """
 
     #: Post-call block must exceed BOTH the timed call and this floor
@@ -200,15 +212,33 @@ class WallClockTimer(Timer):
     #: post-call block must not abort a whole campaign, while a genuinely
     #: async workload is suspicious every time.
     NONBLOCKING_ATTEMPTS = 3
+    #: Default minimum timed-region length (seconds): ~1000x the perf
+    #: counter's resolution and comfortably above a single Python-call
+    #: dispatch, so sub-floor workloads get inner-repeated.
+    MIN_MEASURABLE_S = 1e-4
+    #: Inner-repeat ceiling — bounds the cost of measuring a pathologically
+    #: fast (or mis-calibrated) workload.
+    MAX_INNER_REPEATS = 1024
 
     def __init__(
         self,
         workloads: Mapping[str, Callable[[], object]],
         check_blocking: bool = True,
+        min_time_s: Optional[float] = None,
     ):
         self._workloads = dict(workloads)
         self._check_blocking = check_blocking
         self._blocking_checked: set = set()
+        self._min_time_s = (
+            self.MIN_MEASURABLE_S if min_time_s is None else float(min_time_s)
+        )
+        self._inner_repeats: Dict[str, int] = {}
+
+    @property
+    def inner_repeats(self) -> Dict[str, int]:
+        """Calibrated inner-repeat count per workload measured so far (1 =
+        the workload clears the floor in a single call)."""
+        return dict(self._inner_repeats)
 
     def _checked_first_measure(self, name: str, fn: Callable[[], object]) -> float:
         for attempt in range(self.NONBLOCKING_ATTEMPTS):
@@ -235,22 +265,49 @@ class WallClockTimer(Timer):
     def measure(self, name: str) -> float:
         return self.measure_many(name, 1)[0]
 
+    def _calibrate(self, name: str, fn: Callable[[], object]) -> int:
+        """First-touch calibration: one timed call (doubling as the
+        blocking-contract check) decides the inner-repeat count. The
+        calibration sample is discarded — a sub-floor single-call sample
+        must not be mixed in with the mean-of-``r`` samples it mandates."""
+        if self._check_blocking and name not in self._blocking_checked:
+            self._blocking_checked.add(name)
+            t = self._checked_first_measure(name, fn)
+        else:
+            t0 = time.perf_counter()
+            fn()
+            t = time.perf_counter() - t0
+        r = 1
+        if self._min_time_s > 0.0 and t < self._min_time_s:
+            r = min(self.MAX_INNER_REPEATS,
+                    max(1, math.ceil(self._min_time_s / max(t, 1e-9))))
+        self._inner_repeats[name] = int(r)
+        return int(r)
+
     def measure_many(self, name: str, m: int) -> List[float]:
-        """Batched sampling: one workload lookup (and one blocking-contract
-        check, ever) per batch instead of per sample — the per-sample loop
-        is just clock/call/clock."""
+        """Batched sampling: one workload lookup (and one calibration /
+        blocking-contract check, ever) per workload — the per-sample loop
+        is just clock/call/clock, or clock/r-calls/clock divided by ``r``
+        for workloads under the minimum-measurable floor."""
         fn = self._workloads[name]
         out: List[float] = []
         if m <= 0:
             return out
-        if self._check_blocking and name not in self._blocking_checked:
-            self._blocking_checked.add(name)
-            out.append(self._checked_first_measure(name, fn))
+        r = self._inner_repeats.get(name)
+        if r is None:
+            r = self._calibrate(name, fn)
         perf = time.perf_counter
+        if r == 1:
+            while len(out) < m:
+                t0 = perf()
+                fn()
+                out.append(perf() - t0)
+            return out
         while len(out) < m:
             t0 = perf()
-            fn()
-            out.append(perf() - t0)
+            for _ in range(r):
+                fn()
+            out.append((perf() - t0) / r)
         return out
 
 

@@ -65,43 +65,23 @@ import numpy as np
 
 from .discriminant import flops_discriminant_test
 from .engine import ExperimentEngine
+from .family import InstanceSpec, family_names, get_family
 from .faults import FaultPlan, InjectedFault, active_plan
 from .measure import CostModelTimer, NoiseProfile, SimulatedTimer, Timer, WallClockTimer
 from .retry import STORE_IO_POLICY, with_retries
 from .scores import filter_candidates, initial_hypothesis_by_time
 from .session import MeasurementSession
 
+__all__ = [  # InstanceSpec re-exported: it moved to repro.core.family
+    "BACKENDS", "InstanceSpec", "SweepSpec", "ShardStore", "StoreDamaged",
+    "instance_entry", "build_timer", "build_sweep_session",
+    "record_from_session", "run_chunked_campaign", "run_shard",
+    "merge_shards", "write_merged", "census_summary", "sweep_progress",
+]
+
 #: Backends a sweep can measure with. The first two serialize their RNG
 #: state, which is what makes kill/resume bit-identical.
 BACKENDS = ("cost_model", "simulated", "wall_clock")
-
-#: Expression families a sweep grid may name. "chain" is the paper's
-#: Expression 1; the rest come from repro.expressions.generalized.
-GENERALIZED_FAMILIES = ("gram", "distributive", "solve", "bilinear")
-FAMILIES = ("chain",) + GENERALIZED_FAMILIES
-
-
-@dataclass(frozen=True)
-class InstanceSpec:
-    """One census row: an expression instance, fully determined by JSON."""
-
-    index: int                #: position in the expanded grid (global order)
-    uid: str                  #: stable identifier, unique within the sweep
-    family: str               #: one of FAMILIES
-    params: Dict[str, Any]    #: family-specific (dims / size / seed)
-
-    def to_dict(self) -> Dict[str, Any]:
-        return {
-            "index": self.index, "uid": self.uid,
-            "family": self.family, "params": dict(self.params),
-        }
-
-    @classmethod
-    def from_dict(cls, d: Mapping[str, Any]) -> "InstanceSpec":
-        return cls(
-            index=int(d["index"]), uid=str(d["uid"]),
-            family=str(d["family"]), params=dict(d["params"]),
-        )
 
 
 @dataclass
@@ -179,40 +159,22 @@ class SweepSpec:
             raise ValueError("cache_reuse_saving must be in [0, 1)")
         if self.dispatch_s < 0.0:
             raise ValueError("dispatch_s must be >= 0")
-        unknown = set(self.families) - set(FAMILIES)
+        unknown = set(self.families) - set(family_names())
         if unknown:
-            raise ValueError(f"unknown families {sorted(unknown)}; one of {FAMILIES}")
+            raise ValueError(
+                f"unknown families {sorted(unknown)}; one of {family_names()}"
+            )
 
     # -------------------------------------------------------- expansion ---
 
     def expand(self) -> List[InstanceSpec]:
-        """The full census grid, in deterministic global order."""
+        """The full census grid, in deterministic global order: each
+        registered family expands its own grid dict; the sweep concatenates
+        (sorted by family name), checks uid uniqueness, and assigns global
+        indices."""
         out: List[InstanceSpec] = []
         for family in sorted(self.families):
-            grid = self.families[family]
-            if family == "chain":
-                count = int(grid.get("count", 0))
-                n_list = [int(n) for n in grid.get("n_matrices", [4])]
-                lo, hi = int(grid.get("lo", 32)), int(grid.get("hi", 512))
-                for i in range(count):
-                    n = n_list[i % len(n_list)]
-                    out.append(InstanceSpec(
-                        index=0,
-                        uid=f"chain-n{n}-i{i:05d}",
-                        family="chain",
-                        params={"n_matrices": n, "lo": lo, "hi": hi, "seed": i},
-                    ))
-            else:
-                sizes = [int(s) for s in grid.get("sizes", ())]
-                per_size = int(grid.get("per_size", 1))
-                for size in sizes:
-                    for s in range(per_size):
-                        out.append(InstanceSpec(
-                            index=0,
-                            uid=f"{family}-n{size}-s{s:03d}",
-                            family=family,
-                            params={"size": size, "seed": s},
-                        ))
+            out.extend(get_family(family).expand_grid(self.families[family]))
         uids = [i.uid for i in out]
         if len(set(uids)) != len(uids):
             dupes = sorted({u for u in uids if uids.count(u) > 1})
@@ -390,62 +352,10 @@ def synthetic_instance_model(
     )
 
 
-def _chain_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
-    """(flops table, descriptive meta, workload-builder thunk) for a chain
-    instance. Expression generators are imported lazily so cost-model
-    workers never build a single jax array. ``meta["kernels"]`` carries the
-    per-algorithm kernel decomposition (computed here, where the enumerated
-    algorithms already exist) — the AnomalyExplainer's rebuild pointer."""
-    from repro.explain.decompose import decompose_chain, kernels_to_compact
-    from repro.expressions.chain import flops_table
-    from repro.expressions.instances import random_instance
-
-    p = inst.params
-    chain = random_instance(
-        int(p["n_matrices"]), int(p["lo"]), int(p["hi"]), seed=int(p["seed"])
-    )
-    algs = chain.algorithms()
-    flops = flops_table(algs)
-    dims = list(chain.dims)
-    size = int(round(float(np.exp(np.mean(np.log(dims))))))  # geometric mean
-    kernels = kernels_to_compact(
-        {a.name: decompose_chain(dims, a.steps) for a in algs}
-    )
-
-    def build_workloads() -> Dict[str, Callable[[], Any]]:
-        from repro.expressions.algorithms import build_workloads as bw
-        from repro.expressions.algorithms import make_chain_inputs
-
-        mats = make_chain_inputs(chain.dims, seed=int(p["seed"]))
-        return bw(algs, mats, warmup=True)
-
-    meta = {"size": size, "dims": dims, "kernels": kernels}
-    return flops, meta, build_workloads
-
-
-def _generalized_entry(inst: InstanceSpec) -> Tuple[Dict[str, float], Dict[str, Any], Callable[[], Dict[str, Callable[[], Any]]]]:
-    from repro.explain.decompose import decompose_generalized, kernels_to_compact
-    from repro.expressions.generalized import FAMILIES as GEN
-
-    p = inst.params
-    size = int(p["size"])
-    family = GEN[inst.family](n=size)
-    flops = family.flops_table()
-    kernels = kernels_to_compact(decompose_generalized(inst.family, size))
-
-    def build_workloads() -> Dict[str, Callable[[], Any]]:
-        return family.workloads(size, seed=int(p["seed"]), warmup=True)
-
-    meta = {"size": size, "dims": None, "kernels": kernels}
-    return flops, meta, build_workloads
-
-
 def instance_entry(inst: InstanceSpec):
-    if inst.family == "chain":
-        return _chain_entry(inst)
-    if inst.family in GENERALIZED_FAMILIES:
-        return _generalized_entry(inst)
-    raise ValueError(f"unknown family {inst.family!r}")
+    """(flops table, descriptive meta, workload-builder thunk) for one
+    instance — resolved through the :mod:`repro.core.family` registry."""
+    return get_family(inst.family).entry(inst)
 
 
 def build_timer(spec: SweepSpec, inst: InstanceSpec, flops: Mapping[str, float],
@@ -534,7 +444,7 @@ def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[st
         ranking, {k: float(v) for k, v in meta["flops"].items()},
         flops_rel_tol=spec.flops_rel_tol,
     )
-    return {
+    record = {
         "uid": meta["uid"],
         "index": int(meta["index"]),
         "family": meta["family"],
@@ -560,6 +470,17 @@ def record_from_session(session: MeasurementSession, spec: SweepSpec) -> Dict[st
         "mean_ranks": {k: float(v) for k, v in ranking.mean_ranks.items()},
         "relative_flops": {k: float(v) for k, v in disc.relative_flops.items()},
     }
+    if spec.backend == "wall_clock":
+        # the WallClockTimer's chosen inner-repeat counts (the
+        # minimum-measurable-time guard) — real-time metadata, so only on
+        # the backend whose records are never byte-compared across resumes
+        repeats = getattr(session.timer, "inner_repeats", None)
+        if repeats:
+            record["inner_repeats"] = {
+                name: int(r) for name, r in sorted(repeats.items())
+                if name in meta["flops"]
+            }
+    return record
 
 
 # -------------------------------------------------------------- the store ---

@@ -219,15 +219,12 @@ def _decompose_chain_dims_cached(
 
 def decompose_instance(family: str, params: Mapping[str, Any]) -> Dict[str, List[KernelSpec]]:
     """Kernels per algorithm for one census instance, rebuilt purely from
-    its (family, params) row — no jax, no re-measurement. Memoized per
-    frozen (family, params)."""
-    if family == "chain":
-        chain_dims = _chain_instance_dims(
-            int(params["n_matrices"]), int(params["lo"]), int(params["hi"]),
-            int(params["seed"]),
-        )
-        return decompose_chain_dims(chain_dims)
-    return decompose_generalized(family, int(params["size"]))
+    its (family, params) row — no jax, no re-measurement. Resolved through
+    the :mod:`repro.core.family` registry (families memoize their own
+    expensive enumerations)."""
+    from repro.core.family import get_family
+
+    return get_family(family).decompose(params)
 
 
 @lru_cache(maxsize=4096)

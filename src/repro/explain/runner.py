@@ -365,30 +365,13 @@ def _build_timer(
 def _whole_algorithm_workloads(
     inst: InstanceSpec, involved: Sequence[str]
 ) -> Dict[str, Callable[[], Any]]:
-    """Jitted+warmed workloads for ONLY the involved algorithms. A chain
-    instance enumerates dozens of algorithms; compiling all of them to
-    extract the winner/loser pair would dominate every wall-clock
-    explanation, so chains build the two thunks selectively. Generalized
-    families have <= 3 variants — the census builder is cheap enough."""
-    if inst.family == "chain":
-        from repro.expressions.algorithms import build_algorithm_fn, make_chain_inputs
-        from repro.expressions.instances import random_instance
+    """Jitted+warmed workloads for ONLY the involved algorithms, resolved
+    through the family registry (families with large enumerations — chains
+    — override ``explain_workloads`` to build the involved pair
+    selectively instead of compiling everything)."""
+    from repro.core.family import get_family
 
-        p = inst.params
-        chain = random_instance(
-            int(p["n_matrices"]), int(p["lo"]), int(p["hi"]), seed=int(p["seed"])
-        )
-        algs = {a.name: a for a in chain.algorithms()}
-        mats = make_chain_inputs(chain.dims, seed=int(p["seed"]))
-        out: Dict[str, Callable[[], Any]] = {}
-        for alg in involved:
-            fn = build_algorithm_fn(algs[alg], mats, jit=True)
-            fn()  # warm up: jit compilation must not land in a timed region
-            out[alg] = fn
-        return out
-    _, _, build_workloads = instance_entry(inst)
-    whole = build_workloads()
-    return {alg: whole[alg] for alg in involved}
+    return get_family(inst.family).explain_workloads(inst, involved)
 
 
 def _wall_clock_workloads(

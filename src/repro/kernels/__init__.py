@@ -4,10 +4,64 @@ Each kernel ships three files: <name>.py (pl.pallas_call + BlockSpec VMEM
 tiling), ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle).
 Kernels are validated in interpret mode on CPU; on TPU they replace the
 pure-JAX paths (ForwardOptions.attn_impl etc.).
+
+The package imports lazily (PEP 562): every ops module imports jax at
+module scope, but the kernel_variants census family only needs kernel
+*metadata* (names, tile grids, FLOP tables) until a workload is built —
+importing ``repro.kernels`` itself stays jax-free until an attribute is
+actually resolved.
+
+Caveat (ordinary Python submodule semantics): ``matmul`` and
+``flash_attention`` are both exported callables AND subpackages of this
+package. Freshly importing a subpackage binds the *module* onto this
+package — including as a side effect of ``__getattr__`` itself resolving
+a sibling export (``chain_matmul`` lives in ``matmul.ops``, so resolving
+it first would leave ``matmul`` shadowed for the rest of a
+``from repro.kernels import chain_matmul, matmul``). ``__getattr__``
+therefore repairs any export its own import just shadowed. A *user's*
+dotted import (``import repro.kernels.matmul.ref``) before any export is
+touched can still shadow the callable — code that needs the callables
+unconditionally imports them from their defining module
+(``from repro.kernels.matmul.ops import matmul``).
 """
 
-from .flash_attention.ops import flash_attention
-from .matmul.ops import chain_matmul, matmul
-from .ssd.ops import ssd_mix
+from typing import TYPE_CHECKING
 
-__all__ = ["chain_matmul", "flash_attention", "matmul", "ssd_mix"]
+#: attribute name -> defining submodule (dotted: each kernel's ops layer)
+_EXPORTS = {
+    "flash_attention": "flash_attention.ops",
+    "chain_matmul": "matmul.ops",
+    "matmul": "matmul.ops",
+    "ssd_mix": "ssd.ops",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        import types
+
+        module = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        value = getattr(module, name)
+        globals()[name] = value  # cache for subsequent lookups
+        # importing the defining submodule binds like-named subpackages
+        # (matmul/, flash_attention/) onto this package, shadowing the
+        # exported callables; repair any export this import just shadowed
+        for n, sub in _EXPORTS.items():
+            if isinstance(globals().get(n), types.ModuleType):
+                m = importlib.import_module(f".{sub}", __name__)
+                globals()[n] = getattr(m, n)
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+if TYPE_CHECKING:  # pragma: no cover - static analysis only
+    from .flash_attention.ops import flash_attention
+    from .matmul.ops import chain_matmul, matmul
+    from .ssd.ops import ssd_mix

@@ -134,27 +134,28 @@ class FsckReport:
 
 
 def _store_kind(out: str) -> str:
-    if os.path.exists(os.path.join(out, "spec.json")):
-        return "sweep"
-    if os.path.exists(os.path.join(out, "espec.json")):
-        return "explain"
-    return "unknown"
+    """The root's campaign kind, via the store-kind registry. fsck never
+    refuses to run: an ambiguous root (two kinds' spec files) reports
+    ``"ambiguous"`` and falls back to shard-file scanning."""
+    from repro.core.stores import AmbiguousStore, detect_store_kind
+
+    try:
+        kind = detect_store_kind(out)
+    except AmbiguousStore:
+        return "ambiguous"
+    return kind.name if kind is not None else "unknown"
 
 
 def _detect_n_shards(out: str) -> int:
     """Shard count from the spec when possible, else from the files on
     disk — fsck must work even when the spec itself is the casualty."""
-    kind = _store_kind(out)
+    from repro.core.stores import AmbiguousStore, detect_store_kind
+
     try:
-        if kind == "sweep":
-            from repro.core.sweep import SweepSpec
-
-            return SweepSpec.load(os.path.join(out, "spec.json")).n_shards
-        if kind == "explain":
-            from repro.explain.runner import ExplainSpec
-
-            return ExplainSpec.load(os.path.join(out, "espec.json")).n_shards
-    except (OSError, ValueError, KeyError, TypeError):
+        kind = detect_store_kind(out)
+        if kind is not None:
+            return kind.load_n_shards(out)
+    except (AmbiguousStore, OSError, ValueError, KeyError, TypeError):
         pass
     highest = -1
     for fn in os.listdir(out):

@@ -143,15 +143,23 @@ class ExplainQueue:
 
 
 def open_queue(out: str):
-    """The store's adapter, auto-detected from which spec file it holds."""
-    if os.path.exists(os.path.join(out, SWEEP_SPEC)):
-        return SweepQueue(out)
-    if os.path.exists(os.path.join(out, EXPLAIN_SPEC)):
-        return ExplainQueue(out)
-    raise SystemExit(
-        f"{out} is neither a sweep store ({SWEEP_SPEC}) nor an explain "
-        f"store ({EXPLAIN_SPEC}) — plan a campaign there first"
-    )
+    """The store's adapter, auto-detected through the store-kind registry
+    (:mod:`repro.core.stores`): which registered spec file the root holds
+    decides the drain path, and a root holding more than one refuses
+    rather than guessing."""
+    from repro.core.stores import AmbiguousStore, detect_store_kind, store_kinds
+
+    try:
+        kind = detect_store_kind(out)
+    except AmbiguousStore as err:
+        raise SystemExit(str(err)) from None
+    if kind is None:
+        known = ", ".join(f"{k.name} ({k.spec_file})" for k in store_kinds())
+        raise SystemExit(
+            f"{out} holds no campaign spec — known store kinds: {known}; "
+            "plan a campaign there first"
+        )
+    return kind.make_queue(out)
 
 
 # ------------------------------------------------------------- the worker ---

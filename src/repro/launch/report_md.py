@@ -25,6 +25,24 @@ _CENSUS_HEADER = (
 )
 
 
+def _family_notes(by_family) -> list:
+    """One italic footnote per censused family, from the AlgorithmFamily
+    registry's descriptions (families a reader of the report cannot be
+    assumed to know, e.g. kernel_variants). Unregistered family names in
+    old stores are skipped silently."""
+    from repro.core.family import get_family
+
+    notes = []
+    for fam in by_family:
+        try:
+            desc = get_family(fam).description
+        except KeyError:
+            continue
+        if desc:
+            notes.append(f"*{fam}*: {desc}.")
+    return notes
+
+
 def census_tables(records, name: str = "census") -> str:
     """Markdown anomaly-rate tables (overall / by family / by instance size
     / family x size) from merged DiscriminantSweep records — the paper's
@@ -46,6 +64,9 @@ def census_tables(records, name: str = "census") -> str:
     ]
     for fam, a in s["by_family"].items():
         out.append(_census_agg_row(fam, a))
+    notes = _family_notes(s["by_family"])
+    if notes:
+        out += [""] + notes
     out += ["", "### By instance size (geometric-mean dimension)", "",
             _CENSUS_HEADER.format(col="size")]
     for bucket, a in s["by_size"].items():

@@ -41,8 +41,8 @@ import sys
 from typing import Dict, List, Optional
 
 import repro
+from repro.core.family import family_names, get_family
 from repro.core.sweep import (
-    GENERALIZED_FAMILIES,
     ShardStore,
     StoreDamaged,
     SweepSpec,
@@ -74,11 +74,19 @@ def add_grid_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--lo", type=int, default=32, help="min chain dim")
     g.add_argument("--hi", type=int, default=512, help="max chain dim")
     g.add_argument("--families", default="gram,distributive,solve,bilinear",
-                   help="beyond-chain families (comma list, empty disables)")
+                   help="beyond-chain families (comma list, empty disables; "
+                   "add kernel_variants to census the repo's own kernels)")
     g.add_argument("--sizes", type=_int_list, default=[64, 96, 128, 192, 256],
                    metavar="N,N", help="sizes per beyond-chain family")
     g.add_argument("--per-size", type=int, default=5,
                    help="seeded instances per (family, size)")
+    g.add_argument("--kernel-sites", default="matmul,attention,ssd",
+                   help="kernel_variants sites (comma list); only read when "
+                   "--families includes kernel_variants")
+    g.add_argument("--kernel-native", action="store_true",
+                   help="run kernel_variants Pallas kernels compiled for the "
+                   "local accelerator instead of interpret mode (the manual "
+                   "GPU/TPU lane)")
     g.add_argument("--shards", type=int, default=8)
     g.add_argument("--backend", default="cost_model",
                    choices=["cost_model", "simulated", "wall_clock"])
@@ -115,17 +123,16 @@ def add_grid_args(p: argparse.ArgumentParser) -> None:
 
 def spec_from_args(args: argparse.Namespace) -> SweepSpec:
     families: Dict[str, Dict] = {}
-    if args.chains > 0:
-        families["chain"] = {
-            "count": args.chains, "n_matrices": args.chain_sizes,
-            "lo": args.lo, "hi": args.hi,
-        }
+    chain_grid = get_family("chain").grid_from_args(args)
+    if chain_grid is not None:
+        families["chain"] = chain_grid
+    known = tuple(n for n in family_names() if n != "chain")
     for fam in [f for f in args.families.split(",") if f]:
-        if fam not in GENERALIZED_FAMILIES:
-            raise SystemExit(
-                f"unknown family {fam!r}; one of {GENERALIZED_FAMILIES}"
-            )
-        families[fam] = {"sizes": args.sizes, "per_size": args.per_size}
+        if fam not in known:
+            raise SystemExit(f"unknown family {fam!r}; one of {known}")
+        grid = get_family(fam).grid_from_args(args)
+        if grid is not None:
+            families[fam] = grid
     return SweepSpec(
         name=args.name,
         families=families,

@@ -1,0 +1,118 @@
+"""VariantSite invariants for the sites the kernel_variants census family
+wraps: analytic FLOP counts cross-checked against the explainer's roofline
+kernel table, and variant-output equivalence in Pallas interpret mode on
+CPU (the wall-clock CI lane's correctness precondition — ranking variants
+that compute different things would be meaningless)."""
+
+import numpy as np
+import pytest
+
+from repro.autotune import attention_site, matmul_blocks_site, ssd_chunk_site
+from repro.explain.decompose import KernelSpec
+
+
+def _outputs(site, seed=0):
+    arrays = site.make_inputs(seed)
+    return {v.name: np.asarray(v.build(*arrays)()) for v in site.variants}
+
+
+# ----------------------------------------------------------------- matmul ---
+
+def test_matmul_site_flops_match_roofline_gemm():
+    m, k, n = 48, 32, 64
+    site = matmul_blocks_site(m=m, k=k, n=n, blocks=[(16, 16, 16)],
+                              interpret=True)
+    want = KernelSpec("gemm", (m, k, n)).flops  # the roofline table's 2mkn
+    assert want == 2.0 * m * k * n
+    for name, f in site.flops_table().items():
+        assert f == pytest.approx(want), name
+
+
+def test_matmul_variants_equivalent_interpret():
+    site = matmul_blocks_site(m=32, k=32, n=32,
+                              blocks=[(16, 16, 16), (32, 32, 32)],
+                              interpret=True)
+    outs = _outputs(site)
+    assert set(outs) == {"blocks_16x16x16", "blocks_32x32x32", "xla_dot"}
+    ref = outs["xla_dot"]
+    for name, out in outs.items():
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=name)
+
+
+# -------------------------------------------------------------- attention ---
+
+def test_attention_site_flops_match_roofline_pair():
+    b, s, h, kv, d = 1, 32, 2, 1, 16
+    site = attention_site(b=b, s=s, h=h, kv=kv, d=d)
+    # the shared math is the scores GEMM + the output GEMM with batch*heads
+    # folded into rows — the decomposition the census family publishes
+    want = (KernelSpec("gemm", (b * h * s, d, s)).flops
+            + KernelSpec("gemm", (b * h * s, s, d)).flops)
+    assert want == 2.0 * b * h * s * s * d * 2
+    for name, f in site.flops_table().items():
+        assert f == pytest.approx(want), name
+
+
+def test_attention_variants_equivalent():
+    site = attention_site(b=1, s=32, h=2, kv=1, d=16)
+    outs = _outputs(site)
+    assert set(outs) == {"reference_grouped", "reference_broadcast",
+                         "chunked_flash"}
+    ref = outs["reference_grouped"]
+    for name, out in outs.items():
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3,
+                                   err_msg=name)
+
+
+# -------------------------------------------------------------------- ssd ---
+
+def test_ssd_site_flops_match_family_decomposition():
+    b, s, h, p, n = 1, 32, 2, 8, 8
+    site = ssd_chunk_site(b=b, s=s, h=h, p=p, n=n, chunks=[8, 16, 32])
+    table = site.flops_table()
+    for q in (8, 16, 32):
+        # the site's per-chunk analytic count...
+        want = b * s * h * (2.0 * q * n + 2.0 * q * p + 4.0 * p * n)
+        assert table[f"chunk_{q}"] == pytest.approx(want)
+    # ...and the census family's shared-math decomposition reproduces the
+    # reference chunk's count exactly, as a sum of roofline gemms
+    q0 = 8
+    kernels = [
+        KernelSpec("gemm", (b * h * s, n, q0)),
+        KernelSpec("gemm", (b * h * s, q0, p)),
+        KernelSpec("gemm", (b * h * s, n, p)),
+        KernelSpec("gemm", (b * h * s, p, n)),
+    ]
+    assert sum(k.flops for k in kernels) == pytest.approx(table["chunk_8"])
+
+
+def test_ssd_variants_equivalent():
+    site = ssd_chunk_site(b=1, s=32, h=2, p=8, n=8, chunks=[8, 16, 32])
+    outs = _outputs(site)
+    assert set(outs) == {"chunk_8", "chunk_16", "chunk_32"}
+    ref = outs["chunk_32"]
+    for name, out in outs.items():
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3,
+                                   err_msg=name)
+
+
+# ------------------------------------------- the family's workload bridge ---
+
+def test_family_workloads_are_site_workloads():
+    """The kernel_variants family's build_workloads must produce exactly
+    the site's variant names (warmed, blocking thunks the WallClockTimer
+    accepts)."""
+    from repro.core.family import InstanceSpec
+    from repro.core.sweep import instance_entry
+
+    inst = InstanceSpec(
+        index=0, uid="kernel_variants-matmul-n32-s000",
+        family="kernel_variants",
+        params={"site": "matmul", "size": 32, "seed": 0, "interpret": True},
+    )
+    flops, _, build = instance_entry(inst)
+    wl = build()
+    assert set(wl) == set(flops)
+    for fn in wl.values():
+        fn()  # already warmed; must run

@@ -1,0 +1,93 @@
+"""WallClockTimer minimum-measurable-time guard: sub-dispatch-cost
+workloads get an automatic inner-repeat loop (mean per-call time), slow
+workloads stay single-call, and wall-clock census records surface the
+chosen counts."""
+
+import time
+
+import pytest
+
+from repro.core.measure import WallClockTimer
+
+
+def test_fast_workload_gets_inner_repeats():
+    timer = WallClockTimer({"fast": lambda: None}, check_blocking=False,
+                           min_time_s=1e-3)
+    samples = timer.measure_many("fast", 3)
+    assert len(samples) == 3
+    r = timer.inner_repeats["fast"]
+    assert r > 1
+    # per-call means: orders of magnitude under the floor even repeated
+    assert all(0.0 <= s < 1e-3 for s in samples)
+
+
+def test_slow_workload_stays_single_call():
+    timer = WallClockTimer({"slow": lambda: time.sleep(2e-3)},
+                           check_blocking=False, min_time_s=1e-3)
+    s = timer.measure("slow")
+    assert timer.inner_repeats["slow"] == 1
+    assert s >= 2e-3
+
+
+def test_guard_disabled_with_zero_floor():
+    timer = WallClockTimer({"fast": lambda: None}, check_blocking=False,
+                           min_time_s=0.0)
+    timer.measure("fast")
+    assert timer.inner_repeats["fast"] == 1
+
+
+def test_repeat_count_is_capped():
+    timer = WallClockTimer({"fast": lambda: None}, check_blocking=False,
+                           min_time_s=10.0)  # absurd floor
+    timer.measure("fast")
+    assert timer.inner_repeats["fast"] == WallClockTimer.MAX_INNER_REPEATS
+
+
+def test_calibration_happens_once():
+    calls = []
+    timer = WallClockTimer({"w": lambda: calls.append(1)},
+                           check_blocking=False, min_time_s=0.0)
+    timer.measure_many("w", 2)
+    n_after_first = len(calls)
+    timer.measure_many("w", 2)
+    # second batch: exactly 2 calls, no re-calibration
+    assert len(calls) == n_after_first + 2
+
+
+def test_blocking_check_still_enforced():
+    class FakeAsync:
+        def block_until_ready(self):
+            time.sleep(2e-3)
+
+    timer = WallClockTimer({"async": FakeAsync})
+    with pytest.raises(RuntimeError, match="not blocking"):
+        timer.measure("async")
+
+
+def test_wall_clock_census_record_surfaces_inner_repeats():
+    """End to end through the sweep layer: a wall_clock census record on a
+    sub-floor workload family carries the chosen counts (and deterministic
+    backends never grow the field)."""
+    from repro.core.sweep import SweepSpec, build_sweep_session, record_from_session
+
+    spec = SweepSpec(
+        name="wc", backend="wall_clock", n_shards=1, max_measurements=6,
+        families={"bilinear": {"sizes": [8], "per_size": 1}},
+    )
+    inst = spec.expand()[0]
+    session = build_sweep_session(spec, inst)
+    while session.step():
+        pass
+    record = record_from_session(session, spec)
+    assert "inner_repeats" in record
+    assert set(record["inner_repeats"]) == set(record["flops"])
+    assert all(r >= 1 for r in record["inner_repeats"].values())
+    # the deterministic backends must NOT carry the field (byte-identity)
+    det = SweepSpec(
+        name="wc", backend="cost_model", n_shards=1, max_measurements=6,
+        families={"bilinear": {"sizes": [8], "per_size": 1}},
+    )
+    session = build_sweep_session(det, det.expand()[0])
+    while session.step():
+        pass
+    assert "inner_repeats" not in record_from_session(session, det)
