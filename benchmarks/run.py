@@ -33,6 +33,7 @@ Modules:
   sweep        — DiscriminantSweep census throughput, 1 vs N workers
   explain      — AnomalyExplainer throughput, 1 vs N workers
   kernels      — kernel_variants wall-clock census + per-site variant times
+  serve        — ranking-oracle load: q/s, p50/p99 latency, hit rate
 """
 
 from __future__ import annotations
@@ -51,6 +52,7 @@ from . import (
     bench_paper_tables,
     bench_rank_scaling,
     bench_roofline,
+    bench_serve,
     bench_sweep,
     bench_turbo,
     bench_variant_sites,
@@ -67,6 +69,7 @@ MODULES = {
     "sweep": bench_sweep.run,
     "explain": bench_explain.run,
     "kernels": bench_kernels.run,
+    "serve": bench_serve.run,
 }
 
 

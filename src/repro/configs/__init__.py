@@ -2,50 +2,47 @@
 
 Each architecture lives in its own module with a ``FULL`` (exact public
 config) and ``SMOKE`` (reduced same-family config for CPU tests) variant.
+
+Arch modules are imported lazily (first ``get_config`` call): they pull in
+``repro.models`` and therefore jax, while this package also hosts the
+jax-free shape/bucketing tables (:mod:`repro.configs.shapes`) consumed by
+the census planner and the serving oracle — importing those must not pay
+the model stack's import.
 """
 
-from typing import Dict, List
+from typing import TYPE_CHECKING, Dict, List
 
-from repro.models import ModelConfig
-
-from . import (
-    command_r_plus_104b,
-    gemma2_27b,
-    granite_8b,
-    granite_moe_3b_a800m,
-    jamba_v01_52b,
-    llava_next_mistral_7b,
-    mamba2_1_3b,
-    qwen2_moe_a2_7b,
-    qwen3_14b,
-    whisper_tiny,
-)
 from .shapes import LONG_CONTEXT_ARCHS, SHAPES, SKIPS, ShapeSpec, cells
 
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.models import ModelConfig
+
 _MODULES = {
-    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
-    "granite-moe-3b-a800m": granite_moe_3b_a800m,
-    "gemma2-27b": gemma2_27b,
-    "command-r-plus-104b": command_r_plus_104b,
-    "qwen3-14b": qwen3_14b,
-    "granite-8b": granite_8b,
-    "llava-next-mistral-7b": llava_next_mistral_7b,
-    "whisper-tiny": whisper_tiny,
-    "jamba-v0.1-52b": jamba_v01_52b,
-    "mamba2-1.3b": mamba2_1_3b,
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "gemma2-27b": "gemma2_27b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen3-14b": "qwen3_14b",
+    "granite-8b": "granite_8b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "whisper-tiny": "whisper_tiny",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "mamba2-1.3b": "mamba2_1_3b",
 }
 
 ARCH_NAMES: List[str] = list(_MODULES)
 
 
-def get_config(name: str, smoke: bool = False) -> ModelConfig:
+def get_config(name: str, smoke: bool = False) -> "ModelConfig":
     if name not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
-    mod = _MODULES[name]
+    import importlib
+
+    mod = importlib.import_module(f".{_MODULES[name]}", __name__)
     return mod.SMOKE if smoke else mod.FULL
 
 
-def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+def all_configs(smoke: bool = False) -> Dict[str, "ModelConfig"]:
     return {n: get_config(n, smoke) for n in ARCH_NAMES}
 
 

@@ -17,7 +17,8 @@ silently drain as a sweep). This registry makes the kinds first-class:
   ``make_queue`` (the queue's drainable adapter factory), so neither
   consumer enumerates kinds itself.
 
-The two built-in kinds are registered at import time; a future kind
+The built-in kinds (sweep, explain, and the serving oracle's ranking
+cache — ``ocache.json``) are registered at import time; a future kind
 (e.g. a replay campaign) registers itself here and both the queue and
 fsck pick it up with zero changes.
 """
@@ -121,6 +122,18 @@ def _explain_queue(out: str) -> Any:
     return ExplainQueue(out)
 
 
+def _oracle_n_shards(out: str) -> int:
+    from repro.serve.cache import SPEC_FILE, OracleCacheSpec
+
+    return OracleCacheSpec.load(os.path.join(out, SPEC_FILE)).n_shards
+
+
+def _oracle_queue(out: str) -> Any:
+    from repro.serve.oracle import OracleQueue
+
+    return OracleQueue(out)
+
+
 register_store_kind(StoreKind(
     name="sweep", spec_file="spec.json",
     load_n_shards=_sweep_n_shards, make_queue=_sweep_queue,
@@ -128,4 +141,8 @@ register_store_kind(StoreKind(
 register_store_kind(StoreKind(
     name="explain", spec_file="espec.json",
     load_n_shards=_explain_n_shards, make_queue=_explain_queue,
+))
+register_store_kind(StoreKind(
+    name="oracle", spec_file="ocache.json",
+    load_n_shards=_oracle_n_shards, make_queue=_oracle_queue,
 ))

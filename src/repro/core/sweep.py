@@ -1147,11 +1147,12 @@ def write_merged(spec: SweepSpec, root: str, path: Optional[str] = None) -> str:
 
 
 def size_bucket(size: int) -> str:
-    """Power-of-two size bucket label, e.g. ``[128, 256)``."""
-    lo = 1
-    while lo * 2 <= size:
-        lo *= 2
-    return f"[{lo}, {lo * 2})"
+    """Power-of-two size bucket label, e.g. ``[128, 256)`` — delegates to the
+    repo's one shape-bucketing rule (`repro.configs.shapes.shape_bucket`) at
+    one bucket per octave, so report tables and the oracle cache agree."""
+    from repro.configs.shapes import shape_bucket
+
+    return shape_bucket(size)
 
 
 def census_summary(records: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:

@@ -1,0 +1,44 @@
+"""Serving: the inference engine and the ranking oracle.
+
+Two unrelated kinds of "serve" live here, with very different import
+costs, so everything is exported lazily (PEP 562):
+
+* the model-serving engine (:mod:`repro.serve.engine`,
+  :mod:`repro.serve.quant`) — imports jax;
+* ranking-as-a-service (:mod:`repro.serve.oracle`,
+  :mod:`repro.serve.cache`) — the census-backed dispatch oracle, which
+  must stay importable without jax (its hot path is pure dict lookups
+  over the cache).
+"""
+
+from typing import Any
+
+_EXPORTS = {
+    # jax-free: the oracle and its two-tier cache
+    "RankingOracle": "repro.serve.oracle",
+    "OracleQueue": "repro.serve.oracle",
+    "hit_rate": "repro.serve.oracle",
+    "default_machine_name": "repro.serve.oracle",
+    "OracleCache": "repro.serve.cache",
+    "OracleCacheSpec": "repro.serve.cache",
+    "cache_key": "repro.serve.cache",
+    "shard_of_key": "repro.serve.cache",
+    "CONFIDENCE_MEASURED": "repro.serve.cache",
+    "CONFIDENCE_BUCKETED": "repro.serve.cache",
+    "CONFIDENCE_MODEL_ONLY": "repro.serve.cache",
+    # jax: the inference engine
+    "ServingEngine": "repro.serve.engine",
+    "make_prefill": "repro.serve.engine",
+    "make_serve_step": "repro.serve.engine",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str) -> Any:
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

@@ -298,7 +298,7 @@ def test_store_kind_detection(tmp_path):
         store_kinds,
     )
 
-    assert [k.name for k in store_kinds()] == ["sweep", "explain"]
+    assert [k.name for k in store_kinds()] == ["sweep", "explain", "oracle"]
     root = str(tmp_path)
     assert detect_store_kind(root) is None
     with open(os.path.join(root, "spec.json"), "w") as fh:
@@ -307,6 +307,11 @@ def test_store_kind_detection(tmp_path):
     os.replace(os.path.join(root, "spec.json"),
                os.path.join(root, "espec.json"))
     assert detect_store_kind(root).name == "explain"
+    os.replace(os.path.join(root, "espec.json"),
+               os.path.join(root, "ocache.json"))
+    assert detect_store_kind(root).name == "oracle"
+    os.replace(os.path.join(root, "ocache.json"),
+               os.path.join(root, "espec.json"))
     with open(os.path.join(root, "spec.json"), "w") as fh:
         json.dump({}, fh)
     with pytest.raises(AmbiguousStore, match="multiple campaign kinds"):

@@ -1,0 +1,366 @@
+"""Ranking-as-a-service: the dispatch oracle and its two-tier cache.
+
+Contracts under test, from the ISSUE's acceptance bar:
+
+* warm-cache queries on census-measured instances answer ``measured``
+  with rankings byte-identical to the census records (100% hit rate);
+* an in-bucket but unmeasured instance answers ``bucketed`` from the
+  aggregate; a true miss answers ``model_only`` IMMEDIATELY and is
+  durably enqueued — the hot path never blocks on a measurement;
+* the background queue (the ordinary pull queue: the cache root is a
+  registered store kind) drains enqueued misses under the census's own
+  spec, after which the same query answers ``measured`` byte-identically
+  to what the census itself records for that instance;
+* fsck repairs a damaged cache shard like any other shard, and a
+  re-warm restores the excised entries.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.lease import default_owner
+from repro.core.stores import detect_store_kind
+from repro.core.sweep import (
+    ShardStore,
+    StoreDamaged,
+    SweepSpec,
+    merge_shards,
+    run_shard,
+    write_merged,
+)
+from repro.launch.fsck import fsck_store
+from repro.launch.queue import drain, open_queue
+from repro.serve.cache import (
+    CONFIDENCE_BUCKETED,
+    CONFIDENCE_MEASURED,
+    CONFIDENCE_MODEL_ONLY,
+    OracleCache,
+    OracleCacheSpec,
+    aggregate_entry,
+    cache_key,
+    shard_of_key,
+    split_key,
+)
+from repro.serve.oracle import (
+    OracleQueue,
+    RankingOracle,
+    default_machine_name,
+    hit_rate,
+)
+
+
+@pytest.fixture(scope="module")
+def census(tmp_path_factory):
+    """One small deterministic cost-model census, drained and merged."""
+    root = str(tmp_path_factory.mktemp("census"))
+    spec = SweepSpec(
+        name="oracle-census",
+        families={
+            "gram": {"sizes": [48, 64], "per_size": 3},
+            "solve": {"sizes": [48], "per_size": 2},
+        },
+        n_shards=2,
+        backend="cost_model",
+        dispatch_s=1e-6,
+        max_measurements=12,
+    )
+    spec.save(os.path.join(root, "spec.json"))
+    for shard in range(spec.n_shards):
+        run_shard(spec, root, shard)
+    write_merged(spec, root)
+    return spec, root, merge_shards(spec, root)
+
+
+def _warmed(tmp_path, census, **spec_overrides):
+    spec, root, records = census
+    kwargs = dict(census=root, n_shards=2)
+    kwargs.update(spec_overrides)
+    cspec = OracleCacheSpec(**kwargs)
+    cache = OracleCache.create(str(tmp_path / "cache"), cspec)
+    cache.warm(records, (), machine=default_machine_name(cspec, spec))
+    return RankingOracle.open(cache.root)
+
+
+def _empty(tmp_path, census, **spec_overrides):
+    _, root, _ = census
+    kwargs = dict(census=root, n_shards=2)
+    kwargs.update(spec_overrides)
+    out = str(tmp_path / "cache")
+    OracleCache.create(out, OracleCacheSpec(**kwargs))
+    return RankingOracle.open(out)
+
+
+# ------------------------------------------------------------------ the key ---
+
+
+def test_cache_key_roundtrip_and_stable_sharding():
+    key = cache_key("gram", "[32, 64)", "sweep:census")
+    assert split_key(key) == ("gram", "[32, 64)", "sweep:census")
+    assert shard_of_key(key, 4) == shard_of_key(key, 4)
+    assert 0 <= shard_of_key(key, 4) < 4
+    with pytest.raises(ValueError):
+        cache_key("gr|am", "[32, 64)", "m")
+
+
+# ----------------------------------------------------------------- verdicts ---
+
+
+def test_warm_cache_answers_measured_byte_identical(tmp_path, census):
+    _, _, records = census
+    oracle = _warmed(tmp_path, census)
+    verdicts = oracle.query_batch(
+        [{"family": r["family"], "params": r["params"]} for r in records],
+        enqueue=False,
+    )
+    assert hit_rate(verdicts) == 1.0
+    for verdict, record in zip(verdicts, records):
+        assert verdict["confidence"] == CONFIDENCE_MEASURED
+        assert verdict["uid"] == record["uid"]
+        # byte-identical to the census report's ranking
+        assert (json.dumps(verdict["ranks"], sort_keys=True)
+                == json.dumps(record["ranks"], sort_keys=True))
+        assert verdict["is_anomaly"] == record["is_anomaly"]
+        assert verdict["min_flops_algs"] == record["min_flops_algs"]
+        assert all(r["confidence"] == 1.0 for r in verdict["ranking"])
+
+
+def test_unmeasured_instance_in_warm_bucket_answers_bucketed(tmp_path, census):
+    oracle = _warmed(tmp_path, census)
+    verdict = oracle.query("gram", {"size": 50, "seed": 777}, enqueue=False)
+    assert verdict["confidence"] == CONFIDENCE_BUCKETED
+    assert verdict["bucket"] == "[32, 64)"
+    assert verdict["n_records"] >= 3
+    # aggregate confidences are vote shares
+    assert all(0.0 < r["confidence"] <= 1.0 for r in verdict["ranking"])
+
+
+def test_empty_cache_miss_answers_model_only_and_enqueues(tmp_path, census):
+    _, _, records = census
+    oracle = _empty(tmp_path, census)
+    record = records[0]
+    verdict = oracle.query(record["family"], record["params"])
+    assert verdict["confidence"] == CONFIDENCE_MODEL_ONLY
+    assert verdict["enqueued"] is True
+    assert verdict["n_records"] == 0
+    # a real ranking is still returned (the analytic fallback)
+    assert verdict["ranks"] and verdict["ranking"]
+    assert set(verdict["ranks"]) == set(record["ranks"])
+    # the miss is durable and the shard re-opened to the queue
+    shard = shard_of_key(verdict["key"], oracle.spec.n_shards)
+    assert oracle.cache.pending(shard)
+    # enqueue=False answers without touching the queue
+    before = oracle.cache.miss_totals()[0]
+    v2 = oracle.query("gram", {"size": 500, "seed": 0}, enqueue=False)
+    assert v2["confidence"] == CONFIDENCE_MODEL_ONLY and not v2["enqueued"]
+    assert oracle.cache.miss_totals()[0] == before
+
+
+def test_miss_enqueue_drain_then_measured_byte_identical(tmp_path, census):
+    """The ISSUE's round trip: empty cache -> model_only, queue worker
+    drains the miss, the same query answers measured and byte-identical
+    to the census report's ranking for that instance."""
+    _, _, records = census
+    oracle = _empty(tmp_path, census)
+    record = records[3]
+    first = oracle.query(record["family"], record["params"])
+    assert first["confidence"] == CONFIDENCE_MODEL_ONLY
+    assert first["uid"] == record["uid"]  # grid instances keep real uids
+
+    # the cache root IS a queue: drain it through the ordinary pull loop
+    queue = open_queue(oracle.root)
+    assert isinstance(queue, OracleQueue)
+    assert drain(queue, default_owner()) is True
+    assert queue.progress() == {"completed": 1, "total": 1}
+
+    oracle.reload()
+    second = oracle.query(record["family"], record["params"])
+    assert second["confidence"] == CONFIDENCE_MEASURED
+    assert (json.dumps(second["ranks"], sort_keys=True)
+            == json.dumps(record["ranks"], sort_keys=True))
+    assert second["is_anomaly"] == record["is_anomaly"]
+
+
+def test_ad_hoc_params_get_stable_out_of_grid_uids(tmp_path, census):
+    oracle = _warmed(tmp_path, census)
+    a = oracle.query("gram", {"size": 50, "seed": 123}, enqueue=False)
+    b = oracle.query("gram", {"size": 50, "seed": 123}, enqueue=False)
+    assert a["uid"] == b["uid"] and a["uid"].startswith("gram-adhoc-")
+    assert a["index"] >= (1 << 32)  # never collides with grid indices
+
+
+def test_machine_override_is_a_distinct_key(tmp_path, census):
+    oracle = _warmed(tmp_path, census)
+    default = oracle.query("gram", {"size": 48, "seed": 0}, enqueue=False)
+    other = oracle.query("gram", {"size": 48, "seed": 0},
+                         machine="cpu-1core", enqueue=False)
+    assert default["confidence"] == CONFIDENCE_MEASURED
+    assert other["confidence"] == CONFIDENCE_MODEL_ONLY  # not warmed
+    assert default["key"] != other["key"]
+
+
+# ---------------------------------------------------------------- the cache ---
+
+
+def test_warm_is_idempotent_and_lru_serves_without_io(tmp_path, census):
+    spec, root, records = census
+    cspec = OracleCacheSpec(census=root, n_shards=2)
+    cache = OracleCache.create(str(tmp_path / "cache"), cspec)
+    machine = default_machine_name(cspec, spec)
+    first = cache.warm(records, (), machine=machine)
+    assert first == len(cache) > 0
+    assert cache.warm(records, (), machine=machine) == 0  # nothing new
+    # a repeated get is a pure LRU hit
+    key = cache.keys()[0]
+    entry = cache.get(key)
+    hits_before = cache.hits
+    assert cache.get(key) is entry
+    assert cache.hits == hits_before + 1
+
+
+def test_lru_capacity_bounds_memory_but_not_correctness(tmp_path, census):
+    spec, root, records = census
+    cspec = OracleCacheSpec(census=root, n_shards=2, lru_capacity=1)
+    cache = OracleCache.create(str(tmp_path / "cache"), cspec)
+    cache.warm(records, (), machine=default_machine_name(cspec, spec))
+    keys = cache.keys()
+    assert len(keys) > 1
+    for key in keys + keys:  # evict and re-fault every entry from disk
+        entry = cache.get(key)
+        assert entry is not None and entry["key"] == key
+        assert len(cache._lru) == 1
+
+
+def test_aggregate_entry_modal_ranks_and_anomaly_rule():
+    sources = {
+        "u1": {"index": 0, "size": 48, "ranks": {"a": 1, "b": 2},
+               "mean_ranks": {"a": 1.0, "b": 2.0}, "is_anomaly": False,
+               "reason": "", "min_flops_algs": ["b"], "cause": None,
+               "cause_evidence": None, "offending_kernel": None},
+        "u2": {"index": 1, "size": 50, "ranks": {"a": 1, "b": 2},
+               "mean_ranks": {"a": 1.1, "b": 1.9}, "is_anomaly": True,
+               "reason": "sf_not_best", "min_flops_algs": ["b"],
+               "cause": "dispatch_overhead", "cause_evidence": 0.8,
+               "offending_kernel": None},
+        "u3": {"index": 2, "size": 52, "ranks": {"a": 2, "b": 1},
+               "mean_ranks": {"a": 1.8, "b": 1.2}, "is_anomaly": True,
+               "reason": "sf_not_best", "min_flops_algs": ["b"],
+               "cause": "dispatch_overhead", "cause_evidence": 0.6,
+               "offending_kernel": None},
+    }
+    entry = aggregate_entry("f|[32, 64)|m", sources, seq=0)
+    assert entry["ranks"] == {"a": 1, "b": 2}           # modal ranks
+    assert entry["n_records"] == 3
+    assert entry["anomaly_rate"] == pytest.approx(2 / 3)
+    # min-FLOPs alg b sits in modal rank 2 > best rank 1: bucket anomaly
+    assert entry["is_anomaly"] is True
+    assert entry["cause"] == "dispatch_overhead"
+    assert entry["cause_evidence"] == pytest.approx(0.7)
+    by_alg = {r["alg"]: r for r in entry["ranking"]}
+    assert by_alg["a"]["confidence"] == pytest.approx(2 / 3)
+    # deterministic: same sources, same seq -> identical entry
+    assert aggregate_entry("f|[32, 64)|m", sources, seq=0) == entry
+
+
+def test_explain_causes_ride_into_measured_verdicts(tmp_path, census):
+    spec, root, records = census
+    anomalous = [r for r in records if r["is_anomaly"]] or records[:1]
+    target = anomalous[0]
+    explained = [{
+        "uid": target["uid"], "cause": "dispatch_overhead",
+        "evidence": 0.9, "offending_kernel": "gemm::0",
+    }]
+    cspec = OracleCacheSpec(census=root, n_shards=2)
+    cache = OracleCache.create(str(tmp_path / "cache"), cspec)
+    cache.warm(records, explained, machine=default_machine_name(cspec, spec))
+    oracle = RankingOracle.open(cache.root)
+    verdict = oracle.query(target["family"], target["params"], enqueue=False)
+    assert verdict["confidence"] == CONFIDENCE_MEASURED
+    assert verdict["cause"] == "dispatch_overhead"
+    assert verdict["cause_evidence"] == pytest.approx(0.9)
+
+
+# ------------------------------------------------------- store kind + fsck ---
+
+
+def test_cache_root_is_a_registered_store_kind(tmp_path, census):
+    oracle = _warmed(tmp_path, census)
+    kind = detect_store_kind(oracle.root)
+    assert kind is not None and kind.name == "oracle"
+    assert kind.load_n_shards(oracle.root) == oracle.spec.n_shards
+    queue = open_queue(oracle.root)
+    assert queue.kind == "oracle" and queue.n_shards == oracle.spec.n_shards
+
+
+def test_fsck_repairs_damaged_cache_shard_and_rewarm_restores(tmp_path, census):
+    """The satellite's damaged-cache-shard case: mid-file bitrot in a
+    cache shard is loud (writers refuse), fsck excises + quarantines +
+    rebuilds the manifest, and a re-warm restores the lost entries."""
+    spec, root, records = census
+    oracle = _warmed(tmp_path, census)
+    out = oracle.root
+    machine = default_machine_name(oracle.spec, spec)
+
+    # find a shard holding >= 2 entries and corrupt a byte of its FIRST line
+    shard = next(
+        s for s in range(oracle.spec.n_shards)
+        if len(ShardStore(out, s).open(readonly=True).records) >= 2
+    )
+    path = ShardStore(out, shard).records_path
+    data = open(path, "rb").read()
+    first_nl = data.index(b"\n")
+    open(path, "wb").write(b"\x00" + data[1:first_nl + 1] + data[first_nl + 1:])
+
+    # loud: a writer refuses the shard, the scan counts the damage
+    with pytest.raises(StoreDamaged):
+        ShardStore(out, shard).open()
+    damaged_cache = OracleCache.open(out)
+    assert any(s == shard for s, _, _ in damaged_cache.damaged)
+
+    report = fsck_store(out)
+    assert [f for f in report.findings
+            if f.shard == shard and f.kind == "mid_file_corruption"]
+    assert report.remaining == 0
+    quarantine = os.path.join(out, "quarantine")
+    assert any(".line-" in f for f in os.listdir(quarantine))
+    assert fsck_store(out).clean  # idempotent
+
+    # the excised entry is a miss now; re-warming restores it
+    repaired = OracleCache.open(out)
+    lost = set(oracle.cache.keys()) - set(repaired.keys())
+    assert lost
+    repaired.warm(records, (), machine=machine)
+    assert set(repaired.keys()) == set(oracle.cache.keys())
+    fresh = RankingOracle.open(out)
+    verdicts = fresh.query_batch(
+        [{"family": r["family"], "params": r["params"]} for r in records],
+        enqueue=False,
+    )
+    assert hit_rate(verdicts) == 1.0
+    assert all(v["confidence"] == CONFIDENCE_MEASURED for v in verdicts)
+
+
+def test_queue_pause_and_resume_is_lossless(tmp_path, census):
+    """max_steps pauses mid-miss without committing; the next pass
+    re-measures deterministically and commits the same entry."""
+    _, _, records = census
+    oracle = _empty(tmp_path, census)
+    record = records[1]
+    oracle.query(record["family"], record["params"])
+    queue = OracleQueue(oracle.root)
+    shard = shard_of_key(
+        cache_key(record["family"],
+                  oracle.query(record["family"], record["params"])["bucket"],
+                  oracle.machine_name),
+        oracle.spec.n_shards,
+    )
+    queue.run_shard(shard, max_steps=2)          # pause almost immediately
+    assert queue.progress()["completed"] == 0    # nothing half-committed
+    queue.run_shard(shard)                       # full pass commits
+    assert queue.progress() == {"completed": 1, "total": 1}
+    oracle.reload()
+    verdict = oracle.query(record["family"], record["params"], enqueue=False)
+    assert verdict["confidence"] == CONFIDENCE_MEASURED
+    assert (json.dumps(verdict["ranks"], sort_keys=True)
+            == json.dumps(record["ranks"], sort_keys=True))

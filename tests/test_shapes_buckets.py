@@ -1,0 +1,92 @@
+"""The repo's ONE shape-bucketing rule (repro.configs.shapes).
+
+Contracts under test: power-of-two parity with the census's historical
+``size_bucket`` (bit-for-bit — report tables must not move), boundary
+determinism (every size has exactly one bucket; boundaries partition
+``[1, inf)`` with no gaps or overlaps at any granularity), and jax-free
+importability — both consumers (census report tables, oracle cache keys)
+live on jax-free paths.
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs.shapes import bucket_bounds, shape_bucket
+from repro.core.sweep import size_bucket
+
+
+def test_per_octave_1_matches_census_power_of_two_buckets():
+    for size in list(range(1, 2050)) + [10**6, 2**20, 2**20 + 1]:
+        lo = 1
+        while lo * 2 <= size:
+            lo *= 2
+        assert shape_bucket(size) == f"[{lo}, {lo * 2})"
+
+
+def test_census_size_bucket_delegates_to_shared_rule():
+    for size in (1, 7, 48, 64, 96, 255, 256, 4097):
+        assert size_bucket(size) == shape_bucket(size)
+
+
+@pytest.mark.parametrize("per_octave", [1, 2, 3, 4, 7])
+def test_buckets_partition_every_size(per_octave):
+    """Each size lands in exactly one bucket, buckets tile contiguously:
+    a bucket's hi is the next bucket's lo, nothing is skipped."""
+    prev_hi = 1
+    size = 1
+    while size < 3000:
+        lo, hi = bucket_bounds(size, per_octave)
+        assert lo <= size < hi
+        assert lo == prev_hi  # contiguous: no gap, no overlap
+        # every size inside [lo, hi) maps back to the same bucket
+        assert bucket_bounds(lo, per_octave) == (lo, hi)
+        assert bucket_bounds(hi - 1, per_octave) == (lo, hi)
+        prev_hi = hi
+        size = hi
+
+
+@pytest.mark.parametrize("per_octave", [2, 3, 4])
+def test_boundary_values_are_deterministic_and_increasing(per_octave):
+    """Boundaries are a pure function of (size, per_octave): recomputing
+    yields identical bounds, and within an octave they strictly grow."""
+    for size in range(1, 1200):
+        first = bucket_bounds(size, per_octave)
+        assert first == bucket_bounds(size, per_octave)
+        lo, hi = first
+        assert lo < hi
+        octave = 1
+        while octave * 2 <= size:
+            octave *= 2
+        assert octave <= lo and hi <= 2 * octave
+
+
+def test_finer_buckets_nest_inside_the_octave():
+    # per_octave=4 sub-buckets of [256, 512) never cross the octave edge
+    seen = set()
+    for size in range(256, 512):
+        seen.add(bucket_bounds(size, 4))
+    assert len(seen) == 4
+    assert min(lo for lo, _ in seen) == 256
+    assert max(hi for _, hi in seen) == 512
+
+
+def test_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        shape_bucket(0)
+    with pytest.raises(ValueError):
+        shape_bucket(64, per_octave=0)
+
+
+def test_bucketing_and_oracle_paths_import_without_jax():
+    """The census planner and the serving oracle must not pay the model
+    stack's jax import just to bucket a size or answer a cached query."""
+    code = (
+        "import sys\n"
+        "import repro.configs.shapes\n"
+        "import repro.serve.cache\n"
+        "import repro.serve.oracle\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the hot path'\n"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True)
