@@ -1,0 +1,117 @@
+"""Learned cost model: training cost and active-census throughput.
+
+Two rows quantify what the predictor buys the census:
+
+* ``predict.train`` — closed-form ridge fit from a merged census (feature
+  extraction + the numpy solve + JSON serialization), per training row.
+  Training must stay cheap enough to re-run on every census refresh.
+* ``predict.active_census`` — per-instance wall time of a full active
+  census drain (predict -> gate -> measure the survivors) over the same
+  grid as an unguarded census. The derived text carries the headline
+  numbers the ISSUE acceptance gates on: the instance-throughput
+  multiplier versus measuring everything, the skip fraction, and whether
+  the anomaly set matched the full census exactly.
+
+Everything runs in-process on the deterministic cost-model backend in a
+temp dir — the gate and the engine, not BLAS, are what is measured.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+
+def _families(smoke: bool):
+    per = 4 if smoke else 8
+    return {
+        "solve": {"sizes": [16, 32, 64, 128], "per_size": per},
+        "distributive": {"sizes": [16, 32, 64, 128], "per_size": per},
+        "bilinear": {"sizes": [16, 32], "per_size": 1 if smoke else 2},
+        "chain": {"count": 4 if smoke else 8, "n_matrices": [3],
+                  "lo": 24, "hi": 96},
+    }
+
+
+def _spec(smoke: bool, **overrides):
+    from repro.core.sweep import SweepSpec
+
+    kwargs = dict(
+        name="bench-predict",
+        families=_families(smoke),
+        n_shards=2,
+        backend="cost_model",
+        max_measurements=12,
+        chunk_size=4,
+        save_every=8,
+    )
+    kwargs.update(overrides)
+    return SweepSpec(**kwargs)
+
+
+def _drain(spec, root) -> float:
+    from repro.core.sweep import run_shard
+
+    t0 = time.time()
+    for shard in range(spec.n_shards):
+        run_shard(spec, root, shard)
+    return time.time() - t0
+
+
+def run(smoke: bool, out: List[str], ctx=None) -> None:
+    from repro.core.sweep import merge_shards
+    from repro.predict.model import train_model
+
+    fit_rounds = 5 if smoke else 20
+    with tempfile.TemporaryDirectory(prefix="bench_predict_") as tmp:
+        full = os.path.join(tmp, "full")
+        spec = _spec(smoke)
+        os.makedirs(full, exist_ok=True)
+        spec.save(os.path.join(full, "spec.json"))
+        t_full = _drain(spec, full)
+        records = merge_shards(spec, full)
+
+        t0 = time.time()
+        for _ in range(fit_rounds):
+            model = train_model(spec, records)
+        t_train = (time.time() - t0) / fit_rounds
+        model_path = model.save(os.path.join(tmp, "model.json"))
+
+        active = os.path.join(tmp, "active")
+        aspec = _spec(smoke, predictor_model=model_path,
+                      predict_threshold=0.95)
+        os.makedirs(active, exist_ok=True)
+        aspec.save(os.path.join(active, "spec.json"))
+        t_active = _drain(aspec, active)
+        arecords = merge_shards(aspec, active)
+
+        n = len(arecords)
+        predicted = sum(
+            1 for r in arecords if r.get("provenance") == "predicted"
+        )
+        measured = n - predicted
+        if measured == 0 or predicted == 0:
+            raise AssertionError(
+                f"degenerate gate: {predicted} predicted / {measured} "
+                "measured — the bench grid no longer exercises both paths"
+            )
+        full_anoms = sorted(r["uid"] for r in records if r["is_anomaly"])
+        active_anoms = sorted(r["uid"] for r in arecords if r["is_anomaly"])
+        recall = "equal" if active_anoms == full_anoms else "MISMATCH"
+        throughput = n / measured
+
+    out.append(
+        f"predict.train,{t_train / max(1, model.n_train) * 1e6:.2f},"
+        f"ridge fit of {model.n_train} (instance, alg) rows in "
+        f"{t_train * 1e3:.1f}ms; residual sigma {model.residual_sigma:.4f} "
+        f"log10 s"
+    )
+    out.append(
+        f"predict.active_census,{t_active / n * 1e6:.2f},"
+        f"{n} instances, {predicted} predicted/{measured} measured = "
+        f"{throughput:.1f}x instance throughput "
+        f"(full census {t_full / n * 1e6:.0f}us/inst); "
+        f"anomaly recall {recall} ({len(full_anoms)} anomalies)"
+    )

@@ -34,6 +34,7 @@ Modules:
   explain      — AnomalyExplainer throughput, 1 vs N workers
   kernels      — kernel_variants wall-clock census + per-site variant times
   serve        — ranking-oracle load: q/s, p50/p99 latency, hit rate
+  predict      — learned cost model: training cost, active-census speedup
 """
 
 from __future__ import annotations
@@ -50,6 +51,7 @@ from . import (
     bench_kernels,
     bench_large_chain,
     bench_paper_tables,
+    bench_predict,
     bench_rank_scaling,
     bench_roofline,
     bench_serve,
@@ -70,6 +72,7 @@ MODULES = {
     "explain": bench_explain.run,
     "kernels": bench_kernels.run,
     "serve": bench_serve.run,
+    "predict": bench_predict.run,
 }
 
 

@@ -3,12 +3,12 @@ FLOPs-discriminant test, and report the anomaly rate — the experiment the
 paper positions as the input to performance-model research (Sec. V: "verify
 that there exists an abundance of anomalies").
 
-This example is a thin wrapper over the DiscriminantSweep subsystem
-(:mod:`repro.core.sweep` / ``python -m repro.launch.sweep``): the hunt is a
-one-shard census of the chain family whose state lives under ``--out``, so
-a killed hunt resumes exactly where it stopped by re-running the same
-command — and scaling up is just switching to the sweep CLI with more
-shards and workers.
+This example is a thin wrapper over the stable Python facade
+(:func:`repro.api.run_census` — the same operation as
+``python -m repro census run``): the hunt is a one-shard census of the
+chain family whose state lives under ``--out``, so a killed hunt resumes
+exactly where it stopped by re-running the same command — and scaling up
+is just switching to the umbrella CLI with more shards and workers.
 
     PYTHONPATH=src python examples/anomaly_hunt.py --n 12 --lo 32 --hi 256 \
         [--backend wall_clock|cost_model] [--max-steps N] [--out DIR]
@@ -18,12 +18,8 @@ import argparse
 import os
 import tempfile
 
-from repro.core.sweep import (
-    ShardStore,
-    SweepSpec,
-    census_summary,
-    run_shard,
-)
+from repro.api import run_census
+from repro.core.sweep import ShardStore, SweepSpec, census_summary
 
 MAX_MEASUREMENTS = 24
 
@@ -69,19 +65,17 @@ def main() -> None:
     args = ap.parse_args()
 
     out = args.out or tempfile.mkdtemp(prefix="anomaly_hunt_")
-    spec_file = os.path.join(out, "spec.json")
-    if os.path.exists(spec_file):
-        spec = SweepSpec.load(spec_file)     # resuming: grid comes from disk
+    if os.path.exists(os.path.join(out, "spec.json")):
+        # resuming: the facade takes the grid from disk; warn when this
+        # command line's flags disagree with the planned census
+        spec = SweepSpec.load(os.path.join(out, "spec.json"))
         if spec.to_dict() != build_spec(args).to_dict():
-            print(f"# resuming the census planned in {spec_file}: grid and "
-                  "backend flags from this command line are ignored "
+            print(f"# resuming the census planned in {out}/spec.json: grid "
+                  "and backend flags from this command line are ignored "
                   "(use a fresh --out to start a different hunt)")
+        spec = run_census(out, max_steps=args.max_steps)
     else:
-        os.makedirs(out, exist_ok=True)
-        spec = build_spec(args)
-        spec.save(spec_file)
-
-    run_shard(spec, out, 0, max_steps=args.max_steps)
+        spec = run_census(out, build_spec(args), max_steps=args.max_steps)
 
     records = {r["uid"]: r for r in ShardStore(out, 0).open().records}
     done = 0

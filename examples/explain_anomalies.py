@@ -2,9 +2,11 @@
 
 The paper stops at detecting anomalies; this example closes the loop. It
 runs a small deterministic cost-model census (or reuses one you already
-have), explains every anomaly through the resumable explain subsystem
-(:mod:`repro.explain` / ``python -m repro.launch.explain``), and prints the
-per-anomaly verdicts plus the aggregated cause table.
+have), explains every anomaly, and prints the per-anomaly verdicts plus
+the aggregated cause table — all through the stable Python facade
+(:func:`repro.api.run_census` / :func:`repro.api.explain_census`, the
+same operations as ``python -m repro census run`` /
+``python -m repro explain run``).
 
     PYTHONPATH=src python examples/explain_anomalies.py
     PYTHONPATH=src python examples/explain_anomalies.py --census /tmp/census
@@ -18,25 +20,21 @@ import argparse
 import os
 import tempfile
 
-from repro.core.sweep import SweepSpec, merge_shards, run_shard
-from repro.explain.runner import (
-    ExplainSpec,
-    explain_summary,
-    merge_explained,
-    run_explain_shard,
-)
+from repro.api import explain_census, run_census
+from repro.core.sweep import SweepSpec, merge_shards
+from repro.explain.runner import explain_summary
 
 
 def build_census(out: str, args: argparse.Namespace) -> str:
     """A one-shard chain+bilinear census with strong injected efficiency
     factors (so the equal-FLOPs regime splits often enough to explain)."""
     root = os.path.join(out, "census")
-    spec_file = os.path.join(root, "spec.json")
-    if os.path.exists(spec_file):
-        spec = SweepSpec.load(spec_file)
-    else:
-        os.makedirs(root, exist_ok=True)
-        spec = SweepSpec(
+    if os.path.exists(os.path.join(root, "spec.json")):
+        run_census(root)                       # resume whatever was planned
+        return root
+    run_census(
+        root,
+        SweepSpec(
             name="explain_demo",
             families={
                 "chain": {"count": args.n, "n_matrices": [3, 4],
@@ -48,9 +46,8 @@ def build_census(out: str, args: argparse.Namespace) -> str:
             eff_sigma=args.eff_sigma,
             noise_sigma=0.01,
             max_measurements=12,
-        )
-        spec.save(spec_file)
-    run_shard(spec, root, 0)
+        ),
+    )
     return root
 
 
@@ -77,17 +74,10 @@ def main() -> None:
         print("nothing to explain — try a larger --n or --eff-sigma")
         return
 
-    eroot = os.path.join(out, "explain")
-    espec_file = os.path.join(eroot, "espec.json")
-    if os.path.exists(espec_file):
-        espec = ExplainSpec.load(espec_file)
-    else:
-        os.makedirs(eroot, exist_ok=True)
-        espec = ExplainSpec(name="explain_demo", census=census, n_shards=1)
-        espec.save(espec_file)
-    run_explain_shard(espec, eroot, 0)
-
-    explained = merge_explained(espec, eroot)
+    explained = explain_census(
+        census, os.path.join(out, "explain"),
+        name="explain_demo", n_shards=1,
+    )
     for e in explained:
         off = f"  <- {e['offending_kernel']} of {e['offending_algorithm']}" \
             if e["offending_kernel"] else ""

@@ -1,0 +1,45 @@
+"""repro — a test for FLOPs as a discriminant for linear-algebra algorithms.
+
+The package root stays import-light: the stable facade
+(:mod:`repro.api`) is re-exported lazily via PEP 562, so
+``import repro`` (and ``from repro import run_census``) never pulls jax,
+and each facade call pays only for the subsystems it actually touches.
+The CLI equivalent is the umbrella entrypoint ``python -m repro``
+(:mod:`repro.launch.cli`).
+"""
+
+from typing import TYPE_CHECKING
+
+#: the facade names ``from repro import X`` resolves through repro.api
+_API_NAMES = (
+    "run_census",
+    "explain_census",
+    "warm_oracle",
+    "query",
+    "train_predictor",
+    "predict_ranks",
+)
+
+__all__ = ["api"] + list(_API_NAMES)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api import (  # noqa: F401
+        explain_census,
+        predict_ranks,
+        query,
+        run_census,
+        train_predictor,
+        warm_oracle,
+    )
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_NAMES))

@@ -145,6 +145,18 @@ class SweepSpec:
     #: power loss / host crash too. Off by default: fsync serializes all
     #: workers behind the journal on many filesystems.
     fsync: bool = False
+    #: active-census gate: path to a trained :mod:`repro.predict` model
+    #: (JSON). When set, instances whose predicted ranking confidence
+    #: clears ``predict_threshold`` are emitted as
+    #: ``provenance="predicted"`` records WITHOUT measurement; the rest
+    #: measure normally. Living in the spec (not a CLI flag) means every
+    #: worker and queue host applies the same gate, and predicted records
+    #: stay a pure function of (spec, model file) — byte-identical across
+    #: kills and resumes like everything else in the store.
+    predictor_model: str = ""
+    #: minimum predicted ranking confidence (1 - worst rank-flip
+    #: probability) required to skip an instance's measurement.
+    predict_threshold: float = 0.95
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -159,6 +171,8 @@ class SweepSpec:
             raise ValueError("cache_reuse_saving must be in [0, 1)")
         if self.dispatch_s < 0.0:
             raise ValueError("dispatch_s must be >= 0")
+        if not 0.0 <= self.predict_threshold <= 1.0:
+            raise ValueError("predict_threshold must be in [0, 1]")
         unknown = set(self.families) - set(family_names())
         if unknown:
             raise ValueError(
@@ -685,6 +699,12 @@ class ShardStore:
         fam["done"] += 1
         if rec.get("is_anomaly"):
             fam["anomalies"] += 1
+        # skipped-instance accounting is part of the manifest contract:
+        # an active census must never hide how much it did not measure.
+        # The key appears only when predicted records exist, so manifests
+        # of ordinary censuses keep their historical shape.
+        if rec.get("provenance") == "predicted":
+            fam["predicted"] = fam.get("predicted", 0) + 1
 
     # ---------------------------------------------------------- writing ---
 
@@ -860,7 +880,9 @@ def shard_counts(store: ShardStore) -> Dict[str, Any]:
     n_done = int(manifest["n_completed"])
     n_damaged = 0
     by_family = {
-        f: {"done": int(c.get("done", 0)), "anomalies": int(c.get("anomalies", 0))}
+        f: {"done": int(c.get("done", 0)),
+            "anomalies": int(c.get("anomalies", 0)),
+            **({"predicted": int(c["predicted"])} if "predicted" in c else {})}
         for f, c in manifest["by_family"].items()
     }
     if size > base:
@@ -884,6 +906,8 @@ def shard_counts(store: ShardStore) -> Dict[str, Any]:
             fam["done"] += 1
             if rec.get("is_anomaly"):
                 fam["anomalies"] += 1
+            if rec.get("provenance") == "predicted":
+                fam["predicted"] = fam.get("predicted", 0) + 1
     return {
         "done": n_done,
         "by_family": by_family,
@@ -924,6 +948,7 @@ def run_chunked_campaign(
     heartbeat: Optional[Callable[..., None]] = None,
     timings: Optional[Dict[str, float]] = None,
     faults: Optional[FaultPlan] = None,
+    predictor: Optional[Callable[[str], Optional[Dict[str, Any]]]] = None,
 ) -> bool:
     """The shared chunk/resume/save/append driver behind every sharded
     campaign (census shards AND anomaly explanations — one copy of the
@@ -958,6 +983,18 @@ def run_chunked_campaign(
     ``faults`` is the chaos hook: the ``campaign.step`` injection site is
     poked once per engine step (sigkill / stall ops — see
     :mod:`repro.core.faults`).
+
+    ``predictor`` is the active-census gate: called once per todo uid
+    BEFORE any chunk is built, it returns either a complete
+    ``provenance="predicted"`` record (the instance is recorded without
+    measurement) or ``None`` (measure it normally). Predicted records
+    commit through the ordinary append path — CRC'd, deduped,
+    manifest-tallied — and the gate runs before chunking on every
+    (re)entry, so a killed active census resumes byte-identically: the
+    remaining todo re-predicts to the same records, and engine chunks
+    only ever contain gate-rejected uids. The skipped count is announced
+    via ``progress`` and lands in the manifest's per-family ``predicted``
+    tallies — never silent.
     """
     say = progress or (lambda msg: None)
     beat = heartbeat or (lambda *a: None)
@@ -966,6 +1003,29 @@ def run_chunked_campaign(
     total = len(todo_uids)
     todo = [u for u in todo_uids if u not in completed]
     steps_left = max_steps
+
+    if predictor is not None and todo:
+        t0 = time.perf_counter()
+        predicted: List[Dict[str, Any]] = []
+        remaining: List[str] = []
+        for uid in todo:
+            beat()
+            rec = predictor(uid)
+            if rec is None:
+                remaining.append(uid)
+            else:
+                predicted.append(rec)
+        t["predict_s"] = t.get("predict_s", 0.0) + (time.perf_counter() - t0)
+        if predicted:
+            beat(True)  # prove ownership right before the commit
+            t0 = time.perf_counter()
+            store.append_records(predicted)
+            t["append_s"] = t.get("append_s", 0.0) + (time.perf_counter() - t0)
+            t["predicted"] = t.get("predicted", 0.0) + len(predicted)
+            completed.update(r["uid"] for r in predicted)
+            say(f"{label}: {len(predicted)}/{total} instances predicted "
+                f"without measurement ({len(remaining)} to measure)")
+        todo = remaining
 
     while True:
         engine: Optional[ExperimentEngine] = None
@@ -1072,6 +1132,12 @@ def run_shard(
     rebuild = None
     if spec.backend == "wall_clock":
         rebuild = lambda uids: _wall_clock_timers(spec, instances, uids)
+    predictor = None
+    if spec.predictor_model:
+        # lazy: repro.predict imports back into this module
+        from repro.predict.active import census_gate
+
+        predictor = census_gate(spec, instances)
     timings: Dict[str, float] = {}
     run_chunked_campaign(
         store,
@@ -1088,6 +1154,7 @@ def run_shard(
         heartbeat=heartbeat,
         timings=timings,
         faults=faults,
+        predictor=predictor,
     )
     if timings:
         store.add_timings(timings)
@@ -1171,6 +1238,9 @@ def census_summary(records: Sequence[Mapping[str, Any]]) -> Dict[str, Any]:
             "rate": (len(anom) / n) if n else 0.0,
             "reasons": reasons,
             "converged": sum(1 for r in rows if r["converged"]),
+            "predicted": sum(
+                1 for r in rows if r.get("provenance") == "predicted"
+            ),
         }
 
     by_family: Dict[str, Any] = {}
@@ -1221,26 +1291,32 @@ def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
     total_done = 0
     anomalies = 0
     total_damaged = 0
+    total_predicted = 0
     per_family: Dict[str, Dict[str, int]] = {}
     for shard in range(spec.n_shards):
         store = ShardStore(root, shard)
         counts = shard_counts(store)
         shard_anom = 0
+        shard_pred = 0
         for fam_name, fam_counts in counts["by_family"].items():
             fam = per_family.setdefault(
-                fam_name, {"done": 0, "anomalies": 0}
+                fam_name, {"done": 0, "anomalies": 0, "predicted": 0}
             )
             fam["done"] += fam_counts["done"]
             fam["anomalies"] += fam_counts["anomalies"]
+            fam["predicted"] += fam_counts.get("predicted", 0)
             shard_anom += fam_counts["anomalies"]
+            shard_pred += fam_counts.get("predicted", 0)
         in_flight = os.path.exists(store.engine_path)
         per_shard.append({
             "shard": shard, "done": counts["done"], "total": totals[shard],
-            "anomalies": shard_anom, "in_flight_chunk": in_flight,
+            "anomalies": shard_anom, "predicted": shard_pred,
+            "in_flight_chunk": in_flight,
             "damaged": counts.get("damaged", 0),
         })
         total_done += counts["done"]
         anomalies += shard_anom
+        total_predicted += shard_pred
         total_damaged += counts.get("damaged", 0)
     return {
         "name": spec.name,
@@ -1248,6 +1324,7 @@ def sweep_progress(spec: SweepSpec, root: str) -> Dict[str, Any]:
         "completed": total_done,
         "anomalies": anomalies,
         "damaged": total_damaged,
+        "predicted": total_predicted,
         "by_family": per_family,
         "shards": per_shard,
     }

@@ -1,0 +1,41 @@
+"""Shared CLI plumbing for the launch surfaces — one definition per flag.
+
+The launch modules each used to re-declare their own ``--out``/``--dry-run``
+pairs, and the five ``fsck`` routes (``census fsck``, ``explain fsck``,
+``queue fsck``, ``oracle fsck``, and the standalone ``fsck``) had drifted
+into subtly different help texts and option sets. Both the umbrella CLI
+(``python -m repro``, :mod:`repro.launch.cli`) and the legacy
+``python -m repro.launch.X`` aliases now route through these helpers, so
+the flag sets cannot drift again — ``tests/test_cli_unified.py`` diffs the
+five fsck help texts to hold that.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def add_fsck_args(p: argparse.ArgumentParser) -> None:
+    """THE fsck flag set. Every fsck route — the four sub-surface
+    ``fsck`` verbs and the standalone ``repro fsck`` — registers exactly
+    these options and dispatches to :func:`fsck_command`."""
+    p.add_argument("--out", required=True, help="store root to check")
+    p.add_argument("--dry-run", action="store_true",
+                   help="classify and report only; change nothing")
+
+
+def fsck_command(args: argparse.Namespace) -> int:
+    """The one fsck entry all routes share (lazy import keeps ``--help``
+    cheap)."""
+    from repro.launch.fsck import run_fsck
+
+    return run_fsck(args.out, dry_run=args.dry_run)
+
+
+def deprecated_alias(old: str, new: str) -> None:
+    """One-line pointer printed (stderr) by the legacy
+    ``python -m repro.launch.X`` entrypoints. They keep working — scripts
+    do not break — but the umbrella ``python -m repro`` owns the docs."""
+    print(f"# note: `python -m {old}` is a legacy alias; "
+          f"prefer `python -m repro {new}`", file=sys.stderr)

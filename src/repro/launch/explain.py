@@ -6,14 +6,14 @@ winner/loser kernel segments, :mod:`repro.explain.runner`), then merge the
 sharded explanation records and report ranked, evidence-backed cause tables.
 
     # explain every anomaly of a finished census, 4 workers, resumable
-    PYTHONPATH=src python -m repro.launch.explain run \\
+    PYTHONPATH=src python -m repro explain run \\
         --census /tmp/census --out /tmp/census_explain --workers 4
 
     # inspect / continue / report
-    PYTHONPATH=src python -m repro.launch.explain status --out DIR
-    PYTHONPATH=src python -m repro.launch.explain run    --out DIR --workers 4
-    PYTHONPATH=src python -m repro.launch.explain merge  --out DIR
-    PYTHONPATH=src python -m repro.launch.explain report --out DIR
+    PYTHONPATH=src python -m repro explain status --out DIR
+    PYTHONPATH=src python -m repro explain run    --out DIR --workers 4
+    PYTHONPATH=src python -m repro explain merge  --out DIR
+    PYTHONPATH=src python -m repro explain report --out DIR
 
 Layout under ``--out`` mirrors the sweep: ``espec.json`` (campaign spec; the
 work list is a pure function of it plus the census records),
@@ -26,7 +26,7 @@ deterministic census backends (``cost_model``, ``simulated``) a SIGKILLed
 explain run resumes byte-identical to an uninterrupted one.
 
 Explanation campaigns are also drainable by many machines at once via the
-pull-based work queue (``python -m repro.launch.queue work --out DIR``) —
+pull-based work queue (``python -m repro queue work --out DIR``) —
 see :mod:`repro.launch.queue`.
 """
 
@@ -49,6 +49,7 @@ from repro.explain.runner import (
     run_explain_shard,
     write_merged_explained,
 )
+from repro.launch.cliutil import add_fsck_args, deprecated_alias, fsck_command
 from repro.launch.sweep import _int_list, _worker_env
 
 
@@ -194,7 +195,7 @@ def cmd_run(args: argparse.Namespace) -> int:
     procs: List[subprocess.Popen] = []
     for w, shards in assignment.items():
         cmd = [
-            sys.executable, "-m", "repro.launch.explain", "work",
+            sys.executable, "-m", "repro", "explain", "work",
             "--out", args.out, "--shards", ",".join(map(str, shards)),
         ]
         if args.max_steps_per_shard is not None:
@@ -251,7 +252,7 @@ def cmd_status(args: argparse.Namespace) -> int:
               f"{flag}{damage}")
     if prog.get("damaged"):
         print(f"# {prog['damaged']} damaged record line(s) — merge will "
-              f"refuse; run: python -m repro.launch.fsck --out {args.out}")
+              f"refuse; run: python -m repro fsck --out {args.out}")
     return 0
 
 
@@ -265,12 +266,6 @@ def cmd_merge(args: argparse.Namespace) -> int:
     n = sum(1 for _ in open(path))
     print(f"# merged {n} explanations -> {path}")
     return 0
-
-
-def cmd_fsck(args: argparse.Namespace) -> int:
-    from repro.launch.fsck import run_fsck
-
-    return run_fsck(args.out, dry_run=args.dry_run)
 
 
 def cmd_calibrate(args: argparse.Namespace) -> int:
@@ -341,9 +336,9 @@ def cmd_report(args: argparse.Namespace) -> int:
     return 0
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def main(argv: Optional[List[str]] = None, prog: Optional[str] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="repro.launch.explain",
+        prog=prog or "repro.launch.explain",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
@@ -378,10 +373,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_merge)
 
     p = sub.add_parser("fsck", help="classify/repair/quarantine store damage")
-    p.add_argument("--out", required=True)
-    p.add_argument("--dry-run", action="store_true",
-                   help="report damage without changing anything")
-    p.set_defaults(fn=cmd_fsck)
+    add_fsck_args(p)
+    p.set_defaults(fn=fsck_command)
 
     p = sub.add_parser(
         "calibrate",
@@ -426,4 +419,5 @@ def main(argv: Optional[List[str]] = None) -> int:
 
 
 if __name__ == "__main__":
+    deprecated_alias("repro.launch.explain", "explain")
     sys.exit(main())

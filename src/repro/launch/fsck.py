@@ -6,9 +6,11 @@ refuses to run over damage (:class:`repro.core.sweep.StoreDamaged`)
 because silently skipping unreadable lines publishes a census missing
 rows it claims to have. This tool is the repair path:
 
-    PYTHONPATH=src python -m repro.launch.fsck --out DIR [--dry-run]
+    PYTHONPATH=src python -m repro fsck --out DIR [--dry-run]
 
-(also reachable as ``sweep fsck`` / ``explain fsck`` / ``queue fsck``).
+(also reachable as ``repro census fsck`` / ``repro explain fsck`` /
+``repro queue fsck`` / ``repro oracle fsck`` — all five routes share one
+flag set, :func:`repro.launch.cliutil.add_fsck_args`).
 
 For every shard it classifies damage and acts:
 
@@ -264,6 +266,8 @@ def _fsck_records(out: str, shard: int, report: FsckReport) -> bool:
         fam["done"] += 1
         if rec.get("is_anomaly"):
             fam["anomalies"] += 1
+        if rec.get("provenance") == "predicted":
+            fam["predicted"] = fam.get("predicted", 0) + 1
         crc = zlib.crc32(line, crc)
     truth = {
         "shard": shard,
@@ -481,18 +485,21 @@ def run_fsck(out: str, *, dry_run: bool = False, say=print) -> int:
     return 1 if report.remaining else 0
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def main(argv: Optional[List[str]] = None, prog: Optional[str] = None) -> int:
+    from repro.launch.cliutil import add_fsck_args
+
     ap = argparse.ArgumentParser(
-        prog="repro.launch.fsck",
+        prog=prog or "repro.launch.fsck",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
-    ap.add_argument("--out", required=True, help="store root to check")
-    ap.add_argument("--dry-run", action="store_true",
-                    help="classify and report only; change nothing")
+    add_fsck_args(ap)
     args = ap.parse_args(argv)
     return run_fsck(args.out, dry_run=args.dry_run)
 
 
 if __name__ == "__main__":
+    from repro.launch.cliutil import deprecated_alias
+
+    deprecated_alias("repro.launch.fsck", "fsck")
     sys.exit(main())

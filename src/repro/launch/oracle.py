@@ -5,27 +5,28 @@ The cache root is an ordinary campaign store (kind ``oracle``, marker
 CLI adds the serving-side verbs:
 
     # build the cache from a finished census (+ optional explain store)
-    PYTHONPATH=src python -m repro.launch.oracle warm \\
+    PYTHONPATH=src python -m repro oracle warm \\
         --out CACHE --census CENSUS [--explain EXPLAIN]
 
     # one query, or a JSONL batch
-    PYTHONPATH=src python -m repro.launch.oracle query --out CACHE \\
+    PYTHONPATH=src python -m repro oracle query --out CACHE \\
         --family gram --params '{"size": 96, "seed": 0}'
-    PYTHONPATH=src python -m repro.launch.oracle query --out CACHE \\
+    PYTHONPATH=src python -m repro oracle query --out CACHE \\
         --batch queries.jsonl --json verdicts.jsonl
 
     # JSONL queries in, JSON verdicts out, background cache refresh
-    PYTHONPATH=src python -m repro.launch.oracle serve --out CACHE --refresh
+    PYTHONPATH=src python -m repro oracle serve --out CACHE --refresh
 
     # shards / pending misses / leases
-    PYTHONPATH=src python -m repro.launch.oracle status --out CACHE
+    PYTHONPATH=src python -m repro oracle status --out CACHE
 
     # background measurement of enqueued misses = the ordinary pull queue
-    PYTHONPATH=src python -m repro.launch.queue work --out CACHE
+    PYTHONPATH=src python -m repro queue work --out CACHE
 
 Every query line is ``{"family": ..., "params": {...}}`` (optional
 ``machine``); every verdict line carries ``confidence`` (``measured`` /
-``bucketed`` / ``model_only``), the ranked algorithms, and the anomaly
+``bucketed`` / ``learned_model`` / ``model_only``), the ranked
+algorithms, and the anomaly
 verdict with the explainer's cause when available. Misses answer
 immediately from the analytic cost model and are enqueued for background
 measurement — the hot path never blocks.
@@ -40,6 +41,7 @@ import sys
 import threading
 from typing import Any, Dict, List, Optional
 
+from repro.launch.cliutil import add_fsck_args, deprecated_alias, fsck_command
 from repro.serve.cache import (
     CONFIDENCE_MODEL_ONLY,
     SPEC_FILE,
@@ -76,6 +78,7 @@ def cmd_warm(args: argparse.Namespace) -> int:
             census=os.path.abspath(args.census),
             explain=os.path.abspath(args.explain) if args.explain else "",
             machine=args.machine,
+            model=os.path.abspath(args.model) if args.model else "",
             n_shards=args.shards,
             lru_capacity=args.lru_capacity,
             per_octave=args.per_octave,
@@ -236,22 +239,16 @@ def cmd_status(args: argparse.Namespace) -> int:
               f"[{state}]{holder}")
     if cache.damaged:
         print(f"# {len(cache.damaged)} damaged line(s) — run: "
-              f"python -m repro.launch.fsck --out {args.out}")
+              f"python -m repro fsck --out {args.out}")
     return 0
-
-
-def cmd_fsck(args: argparse.Namespace) -> int:
-    from repro.launch.fsck import run_fsck
-
-    return run_fsck(args.out, dry_run=args.dry_run)
 
 
 # ------------------------------------------------------------------- main ---
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def main(argv: Optional[List[str]] = None, prog: Optional[str] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="repro.launch.oracle",
+        prog=prog or "repro.launch.oracle",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
@@ -266,6 +263,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--machine", default="",
                    help="MachineSpec registry name for the cache keys "
                    "(default: derived from the census backend)")
+    p.add_argument("--model", default="",
+                   help="trained cost model JSON (python -m repro predict "
+                   "train): cache misses consult it before the analytic "
+                   "roofline and answer with confidence learned_model")
     p.add_argument("--shards", type=int, default=4)
     p.add_argument("--lru-capacity", type=int, default=4096)
     p.add_argument("--per-octave", type=int, default=1,
@@ -309,13 +310,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_status)
 
     p = sub.add_parser("fsck", help="classify/repair/quarantine cache damage")
-    p.add_argument("--out", required=True)
-    p.add_argument("--dry-run", action="store_true")
-    p.set_defaults(fn=cmd_fsck)
+    add_fsck_args(p)
+    p.set_defaults(fn=fsck_command)
 
     args = ap.parse_args(argv)
     return args.fn(args)
 
 
 if __name__ == "__main__":
+    deprecated_alias("repro.launch.oracle", "oracle")
     sys.exit(main())

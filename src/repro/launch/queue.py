@@ -11,13 +11,13 @@ the deterministic backends the merged result is byte-identical to a 1-host
 run, because a lease takeover is literally the kill/resume path.
 
     # host A (and B, C, ... — any count, any time, same shared dir)
-    PYTHONPATH=src python -m repro.launch.queue work --out /shared/census
+    PYTHONPATH=src python -m repro queue work --out /shared/census
 
     # simulate N hosts locally (the CI byte-identity smoke)
-    PYTHONPATH=src python -m repro.launch.queue run --out DIR --hosts 2
+    PYTHONPATH=src python -m repro queue run --out DIR --hosts 2
 
     # who holds what
-    PYTHONPATH=src python -m repro.launch.queue status --out DIR
+    PYTHONPATH=src python -m repro queue status --out DIR
 
 The queue serves both campaign kinds, auto-detected from the store root:
 ``spec.json`` = a DiscriminantSweep census, ``espec.json`` = an
@@ -53,6 +53,7 @@ from repro.core.lease import (
     read_lease_ex,
 )
 from repro.core.sweep import ShardStore, StoreDamaged, SweepSpec, shard_counts
+from repro.launch.cliutil import add_fsck_args, deprecated_alias, fsck_command
 
 SWEEP_SPEC = "spec.json"
 EXPLAIN_SPEC = "espec.json"
@@ -294,7 +295,7 @@ def cmd_run(args: argparse.Namespace) -> int:
     procs: List[subprocess.Popen] = []
     for h in range(hosts):
         cmd = [
-            sys.executable, "-m", "repro.launch.queue", "work",
+            sys.executable, "-m", "repro", "queue", "work",
             "--out", args.out, "--host", f"simhost-{h}",
             "--ttl", str(args.ttl), "--heartbeat", str(args.heartbeat),
             "--poll", str(args.poll),
@@ -350,19 +351,13 @@ def cmd_status(args: argparse.Namespace) -> int:
               f"[{state}]{holder}{damage}")
     if total_damaged:
         print(f"# {total_damaged} damaged record line(s) — merge will "
-              f"refuse; run: python -m repro.launch.fsck --out {args.out}")
+              f"refuse; run: python -m repro fsck --out {args.out}")
     return 0
 
 
-def cmd_fsck(args: argparse.Namespace) -> int:
-    from repro.launch.fsck import run_fsck
-
-    return run_fsck(args.out, dry_run=args.dry_run)
-
-
-def main(argv: Optional[List[str]] = None) -> int:
+def main(argv: Optional[List[str]] = None, prog: Optional[str] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="repro.launch.queue",
+        prog=prog or "repro.launch.queue",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
@@ -403,14 +398,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_status)
 
     p = sub.add_parser("fsck", help="classify/repair/quarantine store damage")
-    p.add_argument("--out", required=True)
-    p.add_argument("--dry-run", action="store_true",
-                   help="report damage without changing anything")
-    p.set_defaults(fn=cmd_fsck)
+    add_fsck_args(p)
+    p.set_defaults(fn=fsck_command)
 
     args = ap.parse_args(argv)
     return args.fn(args)
 
 
 if __name__ == "__main__":
+    deprecated_alias("repro.launch.queue", "queue")
     sys.exit(main())

@@ -6,13 +6,13 @@ driving its shards through resumable ExperimentEngine campaigns
 anomaly rates by family and instance size (paper Figs. 5-7).
 
     # 220-instance default census, 4 workers, resumable under DIR
-    PYTHONPATH=src python -m repro.launch.sweep run --out DIR --workers 4
+    PYTHONPATH=src python -m repro census run --out DIR --workers 4
 
     # inspect / continue
-    PYTHONPATH=src python -m repro.launch.sweep status --out DIR
-    PYTHONPATH=src python -m repro.launch.sweep run --out DIR --workers 4
-    PYTHONPATH=src python -m repro.launch.sweep merge --out DIR
-    PYTHONPATH=src python -m repro.launch.sweep report --out DIR
+    PYTHONPATH=src python -m repro census status --out DIR
+    PYTHONPATH=src python -m repro census run --out DIR --workers 4
+    PYTHONPATH=src python -m repro census merge --out DIR
+    PYTHONPATH=src python -m repro census report --out DIR
 
 Shard layout under ``--out``: ``spec.json`` (the full grid + campaign
 parameters; everything downstream is a pure function of it),
@@ -26,9 +26,15 @@ persisted chunk state and, for the deterministic backends (``cost_model``,
 ``simulated``), produces a census byte-identical to an uninterrupted run.
 
 To drain one census with MANY machines instead of many local workers,
-point any number of ``python -m repro.launch.queue work --out DIR``
-processes at the same (shared-filesystem) store — shards are leased
-dynamically rather than assigned (:mod:`repro.launch.queue`).
+point any number of ``python -m repro queue work --out DIR`` processes at
+the same (shared-filesystem) store — shards are leased dynamically rather
+than assigned (:mod:`repro.launch.queue`).
+
+An ACTIVE census (``--predictor MODEL.json``) consults a trained cost
+model (:mod:`repro.predict`) before measuring: instances whose predicted
+ranking confidence clears ``--predict-threshold`` are committed as
+``predicted``-provenance records without measurement; the skip fraction
+is surfaced in ``status`` and the report, never silent.
 """
 
 from __future__ import annotations
@@ -42,6 +48,7 @@ from typing import Dict, List, Optional
 
 import repro
 from repro.core.family import family_names, get_family
+from repro.launch.cliutil import add_fsck_args, deprecated_alias, fsck_command
 from repro.core.sweep import (
     ShardStore,
     StoreDamaged,
@@ -119,6 +126,13 @@ def add_grid_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--fsync", action="store_true",
                    help="fsync record batches (survive power loss, not just "
                    "SIGKILL; serializes workers on many filesystems)")
+    g.add_argument("--predictor", default="",
+                   help="trained cost model JSON (python -m repro predict "
+                   "train); makes the census ACTIVE — instances whose "
+                   "predicted ranking confidence clears --predict-threshold "
+                   "are emitted as predicted records instead of measured")
+    g.add_argument("--predict-threshold", type=float, default=0.95,
+                   help="confidence needed to skip measuring an instance")
 
 
 def spec_from_args(args: argparse.Namespace) -> SweepSpec:
@@ -156,6 +170,8 @@ def spec_from_args(args: argparse.Namespace) -> SweepSpec:
         save_every=args.save_every,
         base_seed=args.seed,
         fsync=args.fsync,
+        predictor_model=args.predictor,
+        predict_threshold=args.predict_threshold,
     )
 
 
@@ -246,7 +262,7 @@ def cmd_run(args: argparse.Namespace) -> int:
     procs: List[subprocess.Popen] = []
     for w, shards in assignment.items():
         cmd = [
-            sys.executable, "-m", "repro.launch.sweep", "work",
+            sys.executable, "-m", "repro", "census", "work",
             "--out", args.out, "--shards", ",".join(map(str, shards)),
         ]
         if args.max_steps_per_shard is not None:
@@ -299,6 +315,10 @@ def cmd_status(args: argparse.Namespace) -> int:
         )
         print(f"# anomalies so far: {prog['anomalies']}/{prog['completed']} "
               f"({fams})")
+    if prog.get("predicted"):
+        frac = prog["predicted"] / max(prog["completed"], 1)
+        print(f"# predicted without measurement: {prog['predicted']}"
+              f"/{prog['completed']} (skip fraction {100.0 * frac:.1f}%)")
     for row in prog["shards"]:
         flag = " (chunk in flight)" if row["in_flight_chunk"] else ""
         anom = f", {row['anomalies']} anomalies" if row["done"] else ""
@@ -307,7 +327,7 @@ def cmd_status(args: argparse.Namespace) -> int:
               f"{anom}{flag}{damage}")
     if prog.get("damaged"):
         print(f"# {prog['damaged']} damaged record line(s) — merge will "
-              f"refuse; run: python -m repro.launch.fsck --out {args.out}")
+              f"refuse; run: python -m repro fsck --out {args.out}")
     return 0
 
 
@@ -321,12 +341,6 @@ def cmd_merge(args: argparse.Namespace) -> int:
     n = sum(1 for _ in open(path))
     print(f"# merged {n} records -> {path}")
     return 0
-
-
-def cmd_fsck(args: argparse.Namespace) -> int:
-    from repro.launch.fsck import run_fsck
-
-    return run_fsck(args.out, dry_run=args.dry_run)
 
 
 def cmd_report(args: argparse.Namespace) -> int:
@@ -345,9 +359,9 @@ def cmd_report(args: argparse.Namespace) -> int:
     return 0
 
 
-def main(argv: Optional[List[str]] = None) -> int:
+def main(argv: Optional[List[str]] = None, prog: Optional[str] = None) -> int:
     ap = argparse.ArgumentParser(
-        prog="repro.launch.sweep",
+        prog=prog or "repro.launch.sweep",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
@@ -382,10 +396,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=cmd_merge)
 
     p = sub.add_parser("fsck", help="classify/repair/quarantine store damage")
-    p.add_argument("--out", required=True)
-    p.add_argument("--dry-run", action="store_true",
-                   help="report damage without changing anything")
-    p.set_defaults(fn=cmd_fsck)
+    add_fsck_args(p)
+    p.set_defaults(fn=fsck_command)
 
     p = sub.add_parser("report", help="anomaly-rate tables (markdown)")
     p.add_argument("--out", required=True)
@@ -398,4 +410,5 @@ def main(argv: Optional[List[str]] = None) -> int:
 
 
 if __name__ == "__main__":
+    deprecated_alias("repro.launch.sweep", "census")
     sys.exit(main())

@@ -1,0 +1,42 @@
+"""Learned cost model: predict per-algorithm times and ranks from the
+census's own analytic metadata, so the census can go *active* — measure
+only the instances whose predicted ranking is uncertain.
+
+Every census record carries exact FLOPs, per-kernel shapes/bytes
+(:mod:`repro.explain.decompose`), roofline terms
+(:mod:`repro.roofline.terms`), and — on the deterministic backends — a
+reconstructible measured outcome. That is a complete training set:
+
+* :mod:`repro.predict.features` — jax-free feature vectors per
+  (instance, algorithm) and training rows from merged census stores.
+* :mod:`repro.predict.model` — ridge regression on log10-time with a
+  closed-form numpy solve; JSON serialization carries the feature schema
+  and a train-set digest so a drifted load fails loudly.
+* :mod:`repro.predict.active` — per-instance rank prediction with a
+  flip-probability estimate, the ``predicted``-provenance census records
+  for confidently predicted instances, and the campaign gate
+  ``census_gate`` that :func:`repro.core.sweep.run_shard` consults when
+  ``SweepSpec.predictor_model`` is set.
+
+Everything here is importable (and usable end to end) without jax.
+"""
+
+from .active import ActivePredictor, PredictedRanking, census_gate, prediction_errors
+from .features import (
+    FEATURE_NAMES,
+    FEATURE_VERSION,
+    census_machine,
+    instance_features,
+    kernel_features,
+    record_features,
+    training_rows,
+)
+from .model import ModelDrift, RidgeModel, fit_ridge, train_model
+
+__all__ = [
+    "FEATURE_NAMES", "FEATURE_VERSION", "kernel_features",
+    "instance_features", "record_features", "training_rows",
+    "census_machine", "ModelDrift", "RidgeModel", "fit_ridge",
+    "train_model", "ActivePredictor", "PredictedRanking", "census_gate",
+    "prediction_errors",
+]

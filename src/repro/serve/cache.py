@@ -63,6 +63,7 @@ SPEC_FILE = "ocache.json"
 #: verdict confidence levels, strongest first
 CONFIDENCE_MEASURED = "measured"      #: this exact instance is in the cache
 CONFIDENCE_BUCKETED = "bucketed"      #: its (family, bucket, machine) is
+CONFIDENCE_LEARNED = "learned_model"  #: trained cost model answered the miss
 CONFIDENCE_MODEL_ONLY = "model_only"  #: analytic cost-model fallback
 
 
@@ -107,6 +108,10 @@ class OracleCacheSpec:
     #: (the explainer's rule: synthetic machine for cost_model/simulated,
     #: cpu-1core for wall_clock)
     machine: str = ""
+    #: optional trained cost model JSON (``repro predict train``): cache
+    #: misses consult it before the analytic roofline and answer with
+    #: confidence ``learned_model``
+    model: str = ""
     n_shards: int = 4
     #: tier-1 capacity (decoded entries held in memory per oracle process)
     lru_capacity: int = 4096

@@ -21,11 +21,18 @@ stores. Three confidence levels, strongest first:
     The instance's ``(family, shape-bucket, machine)`` entry exists but
     this exact instance was never measured: the verdict aggregates the
     bucket's records — per-algorithm modal rank, vote-share confidence.
+``learned_model``
+    A cache miss answered by the TRAINED cost model
+    (:mod:`repro.predict`, attached via ``OracleCacheSpec.model``):
+    predicted times through the census's own candidate filter and
+    discriminant rule, with the model's calibrated rank-flip confidence.
+    Misses are still enqueued for background measurement.
 ``model_only``
-    A true cache miss: an analytic cost-model fallback (machine roofline
-    + per-kernel dispatch) answers immediately, and the miss is durably
-    enqueued for background measurement. The hot path NEVER blocks on a
-    measurement.
+    A true cache miss with no trained model attached (or a machine the
+    model was not trained for): an analytic cost-model fallback (machine
+    roofline + per-kernel dispatch) answers immediately, and the miss is
+    durably enqueued for background measurement. The hot path NEVER
+    blocks on a measurement.
 
 The background side is :class:`OracleQueue` — the cache root registers
 its own store kind (``ocache.json``, see :mod:`repro.core.stores`), so
@@ -59,6 +66,7 @@ from repro.roofline.terms import MACHINES, MachineSpec, get_machine, synthetic_m
 
 from .cache import (
     CONFIDENCE_BUCKETED,
+    CONFIDENCE_LEARNED,
     CONFIDENCE_MEASURED,
     CONFIDENCE_MODEL_ONLY,
     SPEC_FILE,
@@ -117,6 +125,9 @@ class RankingOracle:
         #: (family, params token) -> (flops, kernel counts)
         self._costed: Dict[Tuple[str, str], Tuple[Dict[str, float], Dict[str, int]]] = {}
         self._grid: Optional[Dict[Tuple[str, str], InstanceSpec]] = None
+        #: lazily-opened trained predictor (spec.model); None until tried
+        self._predictor: Optional[Any] = None
+        self._predictor_tried = False
 
     @classmethod
     def open(cls, root: str) -> "RankingOracle":
@@ -205,7 +216,11 @@ class RankingOracle:
         elif entry is not None:
             verdict.update(self._bucketed_verdict(entry))
         else:
-            verdict.update(self._model_verdict(inst, machine_name))
+            learned = self._learned_verdict(inst, machine_name)
+            verdict.update(
+                learned if learned is not None
+                else self._model_verdict(inst, machine_name)
+            )
             if enqueue:
                 self.cache.enqueue_miss(
                     uid=inst.uid, index=inst.index, family=family,
@@ -269,6 +284,53 @@ class RankingOracle:
             "anomaly_rate": float(entry.get("anomaly_rate", 0.0)),
         }
 
+    def _learned(self) -> Optional[Any]:
+        """The trained predictor behind ``spec.model``, opened once.
+        A drifted/tampered model file raises
+        :class:`~repro.predict.model.ModelDrift` on the first miss —
+        loudly, instead of silently degrading to the analytic tier."""
+        if not self._predictor_tried:
+            self._predictor_tried = True
+            if self.spec.model:
+                from repro.predict.active import ActivePredictor
+
+                self._predictor = ActivePredictor.open(
+                    self.spec.model, self.census_spec, threshold=0.0,
+                    machine=self.spec.machine,
+                )
+        return self._predictor
+
+    def _learned_verdict(
+        self, inst: InstanceSpec, machine_name: str
+    ) -> Optional[Dict[str, Any]]:
+        """The trained model's verdict for a miss, or ``None`` when no
+        model is attached or the query targets a machine the model was
+        not trained against (the analytic tier handles those)."""
+        predictor = self._learned()
+        if predictor is None or predictor.machine_name != machine_name:
+            return None
+        pred = predictor.predict(inst)
+        order = sorted(pred.ranks, key=lambda a: (pred.ranks[a], a))
+        return {
+            "confidence": CONFIDENCE_LEARNED,
+            "cache_hit": False,
+            "is_anomaly": bool(pred.is_anomaly),
+            "reason": pred.reason,
+            "ranking": [
+                {"alg": alg, "rank": pred.ranks[alg],
+                 "mean_rank": float(pred.ranks[alg]),
+                 "confidence": round(pred.confidence, 6)}
+                for alg in order
+            ],
+            "ranks": dict(pred.ranks),
+            "min_flops_algs": list(pred.min_flops_algs),
+            "cause": None,
+            "cause_evidence": None,
+            "n_records": 0,
+            "model_confidence": round(pred.confidence, 6),
+            "flip_prob": round(pred.flip_prob, 6),
+        }
+
     def _model_verdict(self, inst: InstanceSpec, machine_name: str) -> Dict[str, Any]:
         """The analytic fallback: machine compute time per algorithm plus
         per-kernel dispatch — answered from the family's flops tables, no
@@ -316,10 +378,15 @@ class RankingOracle:
 
 
 def hit_rate(verdicts: Sequence[Mapping[str, Any]]) -> float:
-    """Fraction of verdicts served from the cache (measured/bucketed)."""
+    """Fraction of verdicts served from the cache itself — strictly
+    ``measured``/``bucketed``; a learned-model answer is still a cache
+    miss (it will be measured in the background)."""
     if not verdicts:
         return 0.0
-    hits = sum(1 for v in verdicts if v["confidence"] != CONFIDENCE_MODEL_ONLY)
+    hits = sum(
+        1 for v in verdicts
+        if v["confidence"] in (CONFIDENCE_MEASURED, CONFIDENCE_BUCKETED)
+    )
     return hits / len(verdicts)
 
 

@@ -1,0 +1,170 @@
+"""One CLI: umbrella dispatch, legacy aliases, fsck parity, lazy facade."""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SURFACES = ("census", "explain", "queue", "fsck", "oracle", "predict")
+
+#: every module-path entrypoint that must keep working as an alias
+LEGACY_ALIASES = {
+    "repro.launch.sweep": "census",
+    "repro.launch.explain": "explain",
+    "repro.launch.queue": "queue",
+    "repro.launch.fsck": "fsck",
+    "repro.launch.oracle": "oracle",
+    "repro.launch.predict": "predict",
+}
+
+#: the five routes that must expose the SAME fsck flag set
+FSCK_ROUTES = (
+    ["fsck"],
+    ["census", "fsck"],
+    ["explain", "fsck"],
+    ["queue", "fsck"],
+    ["oracle", "fsck"],
+)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS"):
+        env.setdefault(var, "1")
+    return env
+
+
+def _repro(args, **kwargs):
+    return subprocess.run(
+        [sys.executable, "-m", "repro"] + args,
+        env=_env(), capture_output=True, text=True, timeout=300, **kwargs
+    )
+
+
+# ---------------------------------------------------------------- umbrella ---
+
+def test_umbrella_help_lists_every_surface():
+    proc = _repro(["--help"])
+    assert proc.returncode == 0, proc.stderr
+    for surface in SURFACES:
+        assert re.search(rf"^  {surface}\s+\S", proc.stdout, re.M), surface
+
+
+def test_unknown_surface_fails_with_usage():
+    proc = _repro(["telepathy"])
+    assert proc.returncode == 2
+    assert "unknown surface 'telepathy'" in proc.stderr
+    assert "python -m repro <surface>" in proc.stderr
+
+
+@pytest.mark.parametrize("surface", SURFACES)
+def test_every_surface_help_is_rebranded(surface):
+    """Each surface answers --help under its umbrella name (prog is passed
+    through, not duplicated) without importing heavy deps."""
+    proc = _repro([surface, "--help"])
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.startswith(f"usage: repro {surface}")
+
+
+def test_umbrella_census_predict_round_trip(tmp_path):
+    """Dispatch is real, not help-only: census run -> predict train ->
+    active census run -> status reports the skip fraction."""
+    grid = ["--chains", "0", "--families", "solve", "--sizes", "16,32",
+            "--per-size", "2", "--shards", "2", "--max-measurements", "6"]
+    full = str(tmp_path / "full")
+    model = str(tmp_path / "model.json")
+    active = str(tmp_path / "active")
+
+    run = _repro(["census", "run", "--out", full, "--workers", "1"] + grid)
+    assert run.returncode == 0, run.stderr
+    assert "4/4 instances complete" in run.stdout
+
+    train = _repro(["predict", "train", "--census", full, "--out", model])
+    assert train.returncode == 0, train.stderr
+    assert "residual sigma" in train.stdout
+
+    rerun = _repro(["census", "run", "--out", active, "--workers", "1"]
+                   + grid + ["--predictor", model])
+    assert rerun.returncode == 0, rerun.stderr
+
+    status = _repro(["census", "status", "--out", active])
+    assert status.returncode == 0, status.stderr
+    assert "predicted without measurement" in status.stdout
+    assert "skip fraction" in status.stdout
+
+    ev = _repro(["predict", "eval", "--census", full, "--model", model])
+    assert ev.returncode == 0, ev.stderr
+    assert "| family |" in ev.stdout and "would skip" in ev.stdout
+
+
+# ------------------------------------------------------------------ aliases ---
+
+@pytest.mark.parametrize("module,surface", sorted(LEGACY_ALIASES.items()))
+def test_legacy_module_paths_still_work_with_pointer(module, surface):
+    proc = subprocess.run(
+        [sys.executable, "-m", module, "--help"],
+        env=_env(), capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "legacy alias" in proc.stderr
+    assert f"python -m repro {surface}" in proc.stderr
+    # the umbrella route itself must NOT carry the deprecation note
+    clean = _repro([surface, "--help"])
+    assert "legacy alias" not in clean.stderr
+
+
+# -------------------------------------------------------------- fsck parity ---
+
+def _usage_options(help_text):
+    """The option strings argparse places in the usage block."""
+    usage = help_text.split("\n\n")[0]
+    return set(re.findall(r"--[\w-]+", usage)) | set(
+        re.findall(r"(?<!-)-[a-z]\b", usage))
+
+
+def test_fsck_option_set_is_identical_on_all_five_routes():
+    """The CLI-drift regression: every fsck route is the same parser, so
+    the five help texts must advertise the same option set."""
+    helps = {}
+    for route in FSCK_ROUTES:
+        proc = _repro(route + ["--help"])
+        assert proc.returncode == 0, (route, proc.stderr)
+        helps[" ".join(route)] = _usage_options(proc.stdout)
+    reference = helps["fsck"]
+    assert reference >= {"--out", "--dry-run"}
+    assert all(opts == reference for opts in helps.values()), helps
+
+
+# ------------------------------------------------------------------- facade ---
+
+def test_import_repro_and_facade_stay_jax_free():
+    """`import repro` (and touching the lazy facade) must not drag in jax
+    or the launch modules — PEP 562 keeps the package importable on
+    machines without the accelerator stack."""
+    code = (
+        "import sys; import repro; "
+        "assert 'jax' not in sys.modules, 'import repro pulled in jax'; "
+        "assert 'repro.api' not in sys.modules, 'facade import was eager'; "
+        "fn = repro.run_census; "
+        "assert 'jax' not in sys.modules, 'facade attribute pulled in jax'; "
+        "assert callable(fn) and callable(repro.train_predictor)"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        env=_env(), capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_facade_exports_match_api_all():
+    import repro
+    import repro.api as api
+
+    assert set(api.__all__) <= set(dir(repro))
+    for name in api.__all__:
+        assert getattr(repro, name) is getattr(api, name)
